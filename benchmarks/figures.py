@@ -1,0 +1,212 @@
+"""One benchmark per paper table/figure (§VI), on the synthetic MNIST-shaped
+task (offline container; see DESIGN.md §7). Scales are reduced for CPU wall
+time; every comparison preserves the paper's per-round compute matching
+(B for SSCA vs B_loc·E for sample-based SGD, B for feature-based)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import algorithms, baselines, fed
+from repro.core.baselines import SGDConfig
+from repro.data.synthetic import classification_dataset
+from repro.models import mlp
+
+P, J, L, N, I = 784, 64, 10, 20_000, 10
+ROUNDS = 300
+EVERY = 50
+
+
+def _problem(seed=0):
+    key = jax.random.PRNGKey(seed)
+    (z, y, lab), (zt, yt, labt) = classification_dataset(
+        key, n=N, num_features=P, num_classes=L, test_n=2000, noise=4.0)
+    params0 = mlp.init(jax.random.PRNGKey(1), P, J, L)
+    return z, y, zt, labt, params0
+
+
+def psl(p, z, y):
+    return mlp.per_sample_loss(p, z, y)
+
+
+def _eval(z, y, zt, labt):
+    def eval_fn(params, state):
+        out = {"cost": float(mlp.mean_loss(params, z[:4000], y[:4000])),
+               "acc": float(mlp.accuracy(params, zt, labt))}
+        if hasattr(state, "slack"):
+            out["slack"] = float(state.slack)
+        return out
+    return eval_fn
+
+
+def _row(name, t0, rounds, hist, extra=""):
+    us = (time.time() - t0) * 1e6 / max(rounds, 1)
+    cost = float(np.asarray(hist["cost"])[-1]) if "cost" in hist else float("nan")
+    acc = float(np.asarray(hist["acc"])[-1]) if "acc" in hist else float("nan")
+    print(f"{name},{us:.0f},cost={cost:.4f};acc={acc:.4f}{extra}", flush=True)
+    return cost, acc
+
+
+def fig1_unconstrained_sample_based():
+    """Fig. 1(a)-(d): Alg 1 vs sample-based SGD [5],[6] and SGD-m [7] at equal
+    per-round computation (B vs B_loc x E)."""
+    z, y, zt, labt, params0 = _problem()
+    data = fed.partition_samples(z, y, I)
+    ev = _eval(z, y, zt, labt)
+    results = {}
+    for B in (10, 100):
+        fl = FLConfig(batch_size=B, a1=0.9 if B == 10 else 0.3,
+                      a2=0.5 if B == 10 else 0.3, alpha_rho=0.1,
+                      alpha_gamma=0.6, tau=0.2 if B == 10 else 0.05,
+                      l2_lambda=1e-5)
+        t0 = time.time()
+        r = algorithms.algorithm1(psl, params0, data, fl, ROUNDS,
+                                  jax.random.PRNGKey(2), ev, EVERY)
+        results[f"alg1_B{B}"] = _row(f"fig1.alg1.B{B}", t0, ROUNDS, r.history)
+        t0 = time.time()
+        r = baselines.sample_sgd(psl, params0, data,
+                                 SGDConfig(lr_a=0.3, lr_alpha=0.3,
+                                           local_steps=1, local_batch=B),
+                                 ROUNDS, jax.random.PRNGKey(2), ev, EVERY)
+        results[f"sgd_B{B}"] = _row(f"fig1.fedsgd.B{B}E1", t0, ROUNDS, r.history)
+        t0 = time.time()
+        r = baselines.sample_sgd(psl, params0, data,
+                                 SGDConfig(lr_a=0.3, lr_alpha=0.0, momentum=0.1,
+                                           local_steps=5, local_batch=max(B // 5, 2)),
+                                 ROUNDS, jax.random.PRNGKey(2), ev, EVERY,
+                                 momentum=True)
+        results[f"sgdm_B{B}"] = _row(f"fig1.sgdm.B{B // 5}E5", t0, ROUNDS, r.history)
+    # paper claim: SSCA converges faster than FedSGD at equal per-round compute
+    for B in (10, 100):
+        assert results[f"alg1_B{B}"][0] < results[f"sgd_B{B}"][0] * 1.05, \
+            f"fig1 ordering violated at B={B}"
+    return results
+
+
+def fig1ef_constrained_sample_based():
+    """Fig. 1(e)-(f): Alg 2 — training cost pinned at U, slack -> 0."""
+    z, y, zt, labt, params0 = _problem()
+    data = fed.partition_samples(z, y, I)
+    ev = _eval(z, y, zt, labt)
+    out = {}
+    for B in (10, 100):
+        fl = FLConfig(batch_size=B, a1=0.9, a2=0.5, alpha_rho=0.1,
+                      alpha_gamma=0.6, tau=0.2, constrained=True,
+                      cost_limit=0.5, penalty_c=1e4)
+        t0 = time.time()
+        r = algorithms.algorithm2(psl, params0, data, fl, 400,
+                                  jax.random.PRNGKey(3), ev, 100)
+        cost, acc = _row(f"fig1ef.alg2.B{B}", t0, 400, r.history,
+                         extra=f";slack={float(np.asarray(r.history['slack'])[-1]):.2e}")
+        out[B] = (cost, acc)
+    return out
+
+
+def fig2_feature_based():
+    """Fig. 2: Alg 3 vs feature-based SGD/SGD-m [13] (same info collection)."""
+    z, y, zt, labt, params0 = _problem()
+    fdata = fed.partition_features(z, y, I)
+    pi = fdata.feature_blocks.shape[-1]
+    w1p = jnp.pad(params0["w1"], ((0, 0), (0, I * pi - P)))
+    fparams0 = {"w0": params0["w0"],
+                "blocks": w1p.reshape(J, I, pi).transpose(1, 0, 2)}
+
+    def ev(p, s):
+        hsum = sum(mlp.client_h(p["blocks"][i], fdata.feature_blocks[i][:4000])
+                   for i in range(I))
+        cost = float(jnp.mean(mlp.per_sample_loss_from_h(p["w0"], hsum, y[:4000])))
+        return {"cost": cost, "acc": float("nan")}
+
+    results = {}
+    for B in (10, 100):
+        fl = FLConfig(batch_size=B, a1=0.9, a2=0.3 if B == 10 else 0.5,
+                      alpha_rho=0.3 if B == 10 else 0.1, alpha_gamma=0.6,
+                      tau=0.1 if B == 10 else 0.2, l2_lambda=1e-5,
+                      mode="feature")
+        t0 = time.time()
+        r = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                  fparams0, fdata, fl, ROUNDS,
+                                  jax.random.PRNGKey(4), ev, EVERY)
+        results[f"alg3_B{B}"] = _row(f"fig2.alg3.B{B}", t0, ROUNDS, r.history)
+        for mom, name in ((False, "sgd"), (True, "sgdm")):
+            t0 = time.time()
+            r = baselines.feature_sgd(
+                mlp.per_sample_loss_from_h, mlp.client_h, fparams0, fdata,
+                SGDConfig(lr_a=0.3, lr_alpha=0.0 if mom else 0.3,
+                          momentum=0.1 if mom else 0.0, local_batch=B),
+                ROUNDS, jax.random.PRNGKey(4), ev, EVERY, momentum=mom)
+            results[f"{name}_B{B}"] = _row(f"fig2.{name}.B{B}", t0, ROUNDS,
+                                           r.history)
+    for B in (10, 100):
+        assert results[f"alg3_B{B}"][0] < results[f"sgd_B{B}"][0] * 1.05, \
+            f"fig2 ordering violated at B={B}"
+    return results
+
+
+def fig3_comm_comp_tradeoff(target=0.45):
+    """Fig. 3: rounds (communication cost) to reach a target training cost vs
+    per-round computation cost (B or B_loc·E)."""
+    z, y, zt, labt, params0 = _problem()
+    data = fed.partition_samples(z, y, I)
+
+    def rounds_to_target(run_fn, rounds=500):
+        r = run_fn(rounds)
+        cost = np.asarray(r.history["cost"])
+        rr = np.asarray(r.history["round"])
+        hit = np.nonzero(cost <= target)[0]
+        return int(rr[hit[0]]) if len(hit) else -1
+
+    ev = _eval(z, y, zt, labt)
+    print("# fig3: rounds-to-target(cost<=%.2f) vs per-round compute" % target)
+    for B in (10, 50, 100, 200):
+        fl = FLConfig(batch_size=B, a1=0.3, a2=0.3, alpha_rho=0.1,
+                      alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
+        n1 = rounds_to_target(lambda rr: algorithms.algorithm1(
+            psl, params0, data, fl, rr, jax.random.PRNGKey(5), ev, 25))
+        n2 = rounds_to_target(lambda rr: baselines.sample_sgd(
+            psl, params0, data, SGDConfig(lr_a=0.3, lr_alpha=0.3,
+                                          local_steps=1, local_batch=B),
+            rr, jax.random.PRNGKey(5), ev, 25))
+        print(f"fig3.B{B},0,alg1_rounds={n1};fedsgd_rounds={n2}", flush=True)
+
+
+def fig4_sparsity_cost_tradeoff():
+    """Fig. 4: model-norm vs training-cost tradeoff — Alg 1 sweeping λ vs
+    Alg 2 sweeping U (Theorem 5: the two formulations trace the same curve)."""
+    z, y, zt, labt, params0 = _problem()
+    data = fed.partition_samples(z, y, I)
+    rows = []
+    for lam in (1e-5, 1e-4, 1e-3):
+        fl = FLConfig(batch_size=100, a1=0.3, a2=0.3, alpha_rho=0.1,
+                      alpha_gamma=0.6, tau=0.05, l2_lambda=lam)
+        r = algorithms.algorithm1(psl, params0, data, fl, ROUNDS,
+                                  jax.random.PRNGKey(6),
+                                  lambda p, s: {"cost": float(mlp.mean_loss(
+                                      p, z[:4000], y[:4000])),
+                                      "l2": float(mlp.l2_sq(p))}, ROUNDS // 2)
+        cost = float(np.asarray(r.history["cost"])[-1])
+        l2 = float(np.asarray(r.history["l2"])[-1])
+        rows.append(("alg1", lam, cost, l2))
+        print(f"fig4.alg1.lam{lam:g},0,cost={cost:.4f};l2={l2:.2f}", flush=True)
+    for u in (0.4, 0.7, 1.0):
+        fl = FLConfig(batch_size=100, a1=0.9, a2=0.5, alpha_rho=0.1,
+                      alpha_gamma=0.6, tau=0.2, constrained=True,
+                      cost_limit=u, penalty_c=1e4)
+        r = algorithms.algorithm2(psl, params0, data, fl, 400,
+                                  jax.random.PRNGKey(6),
+                                  lambda p, s: {"cost": float(mlp.mean_loss(
+                                      p, z[:4000], y[:4000])),
+                                      "l2": float(mlp.l2_sq(p))}, 200)
+        cost = float(np.asarray(r.history["cost"])[-1])
+        l2 = float(np.asarray(r.history["l2"])[-1])
+        rows.append(("alg2", u, cost, l2))
+        print(f"fig4.alg2.U{u:g},0,cost={cost:.4f};l2={l2:.2f}", flush=True)
+    # Theorem 5 behaviour: lower U (tighter cost) => larger l2, and vice versa
+    alg2 = [r for r in rows if r[0] == "alg2"]
+    l2s = [r[3] for r in sorted(alg2, key=lambda r: r[1])]
+    assert l2s == sorted(l2s, reverse=True), f"fig4 monotonicity violated: {l2s}"
+    return rows

@@ -1,0 +1,54 @@
+"""Generate EXPERIMENTS.md tables from results/dryrun/*.json."""
+import glob
+import json
+import sys
+
+ORDER = ["paligemma-3b", "arctic-480b", "seamless-m4t-medium", "qwen2.5-3b",
+         "gemma-7b", "xlstm-1.3b", "qwen3-moe-30b-a3b", "deepseek-67b",
+         "glm4-9b", "glm4-9b-swa", "zamba2-1.2b", "mnist-mlp"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    r = json.load(open(path))
+    return r[0] if isinstance(r, list) else r
+
+
+def table(mesh):
+    rows = []
+    rows.append("| arch | shape | status | bottleneck | compute | memory | "
+                "collective | useful | peak GB/dev |")
+    rows.append("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER:
+        for s in SHAPES:
+            try:
+                r = load(f"results/dryrun/{a}_{s}_{mesh}.json")
+            except FileNotFoundError:
+                continue
+            if r["status"] == "skipped":
+                rows.append(f"| {a} | {s} | skip | — ({r['why'][:42]}) | | | | | |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | **{r['status']}** | "
+                            f"{str(r.get('error',''))[:40]} | | | | | |")
+                continue
+            mem = r.get("memory") or {}
+            peak = (mem.get("peak_bytes") or 0) / 1e9
+            rows.append(
+                f"| {a} | {s} | ok | **{r['bottleneck']}** "
+                f"| {r['compute_s']*1e3:.0f} ms | {r['memory_s']*1e3:.0f} ms "
+                f"| {r['collective_s']*1e3:.0f} ms "
+                f"| {r.get('useful_flop_ratio', 0):.2f} | {peak:.1f} |")
+    return "\n".join(rows)
+
+
+def perf_row(name, base_path, var_path, hypothesis):
+    b, v = load(base_path), load(var_path)
+    bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+    vb = max(v["compute_s"], v["memory_s"], v["collective_s"])
+    return (name, b, v, bb, vb)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(table(mesh))

@@ -1,0 +1,54 @@
+"""Minimal msgpack checkpointing for param / optimizer-state pytrees.
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+rebuilt from a parallel nested structure of dicts/lists/tuples. Scalars
+(python ints/floats) pass through. NamedTuples round-trip as lists — callers
+re-wrap via the `restore_as` treedef argument.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack(leaf):
+    arr = np.asarray(leaf)
+    return {"__nd__": True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack(obj):
+    if isinstance(obj, dict) and obj.get("__nd__"):
+        arr = np.frombuffer(obj["data"], dtype=obj["dtype"]).reshape(obj["shape"])
+        return jnp.asarray(arr)
+    return obj
+
+
+def save_checkpoint(path: str, tree, step: int = 0):
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"step": step, "leaves": [_pack(l) for l in leaves],
+               "treedef": str(treedef)}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like):
+    """`like`: a pytree with the same structure (e.g. fresh init) — leaves are
+    replaced by the stored arrays in flatten order; treedef str is verified."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    stored = [_unpack(o) for o in payload["leaves"]]
+    if len(stored) != len(leaves):
+        raise ValueError(f"checkpoint has {len(stored)} leaves, expected {len(leaves)}")
+    if payload["treedef"] != str(treedef):
+        raise ValueError("checkpoint treedef mismatch")
+    restored = [s.astype(l.dtype).reshape(l.shape) for s, l in zip(stored, leaves)]
+    return jax.tree.unflatten(treedef, restored), payload["step"]

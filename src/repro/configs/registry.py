@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> resolution."""
+from repro.configs import (arctic_480b, deepseek_67b, gemma_7b, glm4_9b,
+                           mnist_mlp, paligemma_3b, qwen2_5_3b,
+                           qwen3_moe_30b_a3b, seamless_m4t_medium, xlstm_1_3b,
+                           zamba2_1_2b)
+
+ARCHS = {
+    "paligemma-3b": paligemma_3b.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "seamless-m4t-medium": seamless_m4t_medium.CONFIG,
+    "qwen2.5-3b": qwen2_5_3b.CONFIG,
+    "gemma-7b": gemma_7b.CONFIG,
+    "xlstm-1.3b": xlstm_1_3b.CONFIG,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b.CONFIG,
+    "deepseek-67b": deepseek_67b.CONFIG,
+    "glm4-9b": glm4_9b.CONFIG,
+    "glm4-9b-swa": glm4_9b.LONG_VARIANT,     # beyond-paper long-context variant
+    "zamba2-1.2b": zamba2_1_2b.CONFIG,
+    "mnist-mlp": mnist_mlp.CONFIG,           # the paper's own model
+}
+
+ASSIGNED = [k for k in ARCHS if k not in ("glm4-9b-swa", "mnist-mlp")]
+
+
+def get_config(name: str):
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}") from None

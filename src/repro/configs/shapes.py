@@ -1,0 +1,89 @@
+"""The four assigned input shapes + ShapeDtypeStruct input_specs builders."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    seq_len=4_096,   global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32_768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  seq_len=32_768,  global_batch=128, kind="decode"),
+    "long_500k":   ShapeConfig("long_500k",   seq_len=524_288, global_batch=1,   kind="decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; reason recorded in DESIGN/EXPERIMENTS."""
+    if shape.name == "long_500k" and shape.kind == "decode":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0
+        if not sub_quadratic:
+            return False, "full-attention arch: 500k decode requires sub-quadratic attention"
+    if shape.kind in ("prefill", "decode") and cfg.family == "mlp":
+        return False, "non-autoregressive classifier: no decode path"
+    return True, ""
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for a train_step batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "mlp":
+        return {"features": _sds((b, cfg.d_model), jnp.float32),
+                "labels_onehot": _sds((b, cfg.vocab_size), jnp.float32)}
+    if cfg.family == "vlm":
+        st = s - cfg.num_prefix_tokens
+        return {"tokens": _sds((b, st), jnp.int32),
+                "targets": _sds((b, st), jnp.int32),
+                "prefix_embeddings": _sds((b, cfg.num_prefix_tokens, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))}
+    if cfg.family == "audio":
+        # speech-to-text: encoder consumes seq_len frames, decoder seq_len//4 tokens
+        sd = max(1, s // 4)
+        return {"frame_embeddings": _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "tokens": _sds((b, sd), jnp.int32),
+                "targets": _sds((b, sd), jnp.int32)}
+    return {"tokens": _sds((b, s), jnp.int32), "targets": _sds((b, s), jnp.int32)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        st = s - cfg.num_prefix_tokens
+        return {"tokens": _sds((b, st), jnp.int32),
+                "prefix_embeddings": _sds((b, cfg.num_prefix_tokens, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))}
+    if cfg.family == "audio":
+        sd = max(1, s // 4)
+        return {"frame_embeddings": _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "tokens": _sds((b, sd), jnp.int32)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token, pos, cache) stand-ins for a one-token serve_step against a
+    seq_len-deep cache/state."""
+    from repro.models import get_model
+    b, s = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, b, s))
+    token = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return token, pos, cache
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Unified entry: returns (kind, specs) for the given shape."""
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {why}")
+    if shape.kind == "train":
+        return "train", train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return "prefill", prefill_specs(cfg, shape)
+    return "decode", decode_specs(cfg, shape)

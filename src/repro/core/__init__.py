@@ -1,0 +1,12 @@
+"""The paper's primary contribution: mini-batch SSCA federated optimization.
+
+  schedules  — stepsize rules (4)/(6)
+  surrogate  — recursive quadratic surrogates (3)/(8)-(9)/(14)-(16)/(25)
+  solvers    — closed-form/lax solvers for Problems 2/5/7/10 (incl. Lemma 1)
+  optimizer  — SSCA as a composable (state, grad) -> state optimizer
+  fed        — client containers, per-round uploads, aggregation, comm loads
+  algorithms — faithful Algorithm 1-4 drivers
+  baselines  — FedSGD / FedAvg / PR-SGD / SGD-m comparison algorithms
+"""
+from repro.core import (algorithms, baselines, fed, optimizer, schedules,  # noqa: F401
+                        solvers, surrogate)

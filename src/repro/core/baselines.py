@@ -1,0 +1,119 @@
+"""Baseline FL algorithms the paper compares against (§VI):
+
+  - sample-based SGD  [5],[6]: E local SGD steps per round, weighted model
+    averaging (E=1 & full batch -> FedSGD; B·E = N_i -> FedAvg; E>1 -> PR-SGD)
+  - sample-based SGD-m [7]: E local momentum-SGD steps, constant stepsize
+  - feature-based SGD / SGD-m [13]: one global step per round using the same
+    h-exchange information collection as Algorithm 3
+
+Learning rates follow §VI: SGD r_t = ā/t^ᾱ; SGD-m constant ā, momentum β̄.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed
+from repro.core.algorithms import RunResult, _run
+from repro.core.fed import FeatureFedData, SampleFedData
+from repro.core.surrogate import tree_axpy, tree_zeros_like
+
+
+class SGDConfig(NamedTuple):
+    lr_a: float = 0.3          # ā
+    lr_alpha: float = 0.3      # ᾱ  (0 -> constant stepsize)
+    momentum: float = 0.0      # β̄ (SGD-m)
+    local_steps: int = 1       # E
+    local_batch: int = 10      # per-local-step batch size
+    l2_lambda: float = 1e-5
+
+
+def _lr(cfg: SGDConfig, t):
+    t = jnp.maximum(t, 1).astype(jnp.float32)
+    return cfg.lr_a / t**cfg.lr_alpha
+
+
+class SGDState(NamedTuple):
+    params: object
+    t: jnp.ndarray
+
+
+class SGDmState(NamedTuple):
+    params: object
+    v: object
+    t: jnp.ndarray
+
+
+def _reg_grad(per_sample_loss, lam):
+    def f(p, z, y):
+        return jnp.mean(per_sample_loss(p, z, y)) + lam * sum(
+            jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+    return jax.grad(f)
+
+
+def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
+               rounds: int, key, eval_fn=None, eval_every: int = 10,
+               momentum: bool = False) -> RunResult:
+    """E local (momentum-)SGD steps per client per round + weighted averaging."""
+    grad_fn = _reg_grad(per_sample_loss, cfg.l2_lambda)
+    w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
+
+    def local(params_v0, feat_i, lab_i, count_i, k, lr):
+        def one(step, carry):
+            p, v = carry
+            kk = jax.random.fold_in(k, step)
+            idx = jax.random.randint(kk, (cfg.local_batch,), 0, count_i)
+            g = grad_fn(p, jnp.take(feat_i, idx, 0), jnp.take(lab_i, idx, 0))
+            if momentum:
+                v = jax.tree.map(lambda vv, gg: cfg.momentum * vv + gg, v, g)
+                upd = v
+            else:
+                upd = g
+            p = jax.tree.map(lambda pp, uu: pp - lr * uu, p, upd)
+            return p, v
+
+        v0 = tree_zeros_like(params_v0)
+        return jax.lax.fori_loop(0, cfg.local_steps, one, (params_v0, v0))
+
+    def step(state, k):
+        lr = cfg.lr_a if momentum else _lr(cfg, state.t)
+        keys = jax.random.split(k, data.num_clients)
+        locals_, _ = jax.vmap(
+            lambda f_, l_, c_, k_: local(state.params, f_, l_, c_, k_, lr)
+        )(data.features, data.labels, data.counts, keys)
+        params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
+        return SGDState(params=params, t=state.t + 1)
+
+    state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
+    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+
+
+def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
+                cfg: SGDConfig, rounds: int, key, eval_fn=None,
+                eval_every: int = 10, momentum: bool = False) -> RunResult:
+    """One global (momentum-)SGD step per round via the Alg-3 info collection."""
+    def step(state, k):
+        if momentum:
+            params, v, t = state.params, state.v, state.t
+        else:
+            params, t = state.params, state.t
+        grad_est, _, _ = fed.feature_round(params, data, k, cfg.local_batch,
+                                           head_loss_from_h, client_h)
+        grad_est = jax.tree.map(
+            lambda g, p: g + 2 * cfg.l2_lambda * p, grad_est, params)
+        lr = cfg.lr_a if momentum else _lr(cfg, t)
+        if momentum:
+            v = jax.tree.map(lambda vv, gg: cfg.momentum * vv + gg, v, grad_est)
+            params = jax.tree.map(lambda p, u: p - lr * u, params, v)
+            return SGDmState(params=params, v=v, t=t + 1)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grad_est)
+        return SGDState(params=params, t=t + 1)
+
+    if momentum:
+        state = SGDmState(params=params0, v=tree_zeros_like(params0),
+                          t=jnp.ones((), jnp.int32))
+    else:
+        state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
+    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)

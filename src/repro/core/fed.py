@@ -1,0 +1,183 @@
+"""Federated protocol layer: client data containers, per-round uploads
+(q-statistics), aggregation with N_i/(BN) weights, and communication-load
+accounting (Fig. 3's x/y axes).
+
+The privacy mechanism of the paper is *model aggregation*: only B-summed
+statistics (q vectors) ever leave a client. The round functions below return
+an `uploads` structure so tests can assert exactly what crossed the boundary.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class SampleFedData(NamedTuple):
+    """Sample-based (horizontal) FL: client i holds rows N_i. Ragged client
+    datasets are stored padded to max N_i; `counts` carries the true N_i."""
+    features: jnp.ndarray     # (I, N_max, P)
+    labels: jnp.ndarray       # (I, N_max, L) one-hot
+    counts: jnp.ndarray       # (I,) true N_i
+
+    @property
+    def num_clients(self):
+        return self.features.shape[0]
+
+    @property
+    def total(self):
+        return jnp.sum(self.counts)
+
+
+class FeatureFedData(NamedTuple):
+    """Feature-based (vertical) FL: client i holds feature block P_i (equal
+    sizes; pad features if needed) and the shared labels."""
+    feature_blocks: jnp.ndarray   # (I, N, P_i)
+    labels: jnp.ndarray           # (N, L)
+
+    @property
+    def num_clients(self):
+        return self.feature_blocks.shape[0]
+
+    @property
+    def total(self):
+        return self.feature_blocks.shape[1]
+
+
+def partition_samples(features, labels, num_clients, key=None) -> SampleFedData:
+    """Split N samples into I (near-)equal client shards."""
+    n = features.shape[0]
+    if key is not None:
+        perm = jax.random.permutation(key, n)
+        features, labels = features[perm], labels[perm]
+    per = n // num_clients
+    features = features[: per * num_clients].reshape(num_clients, per, -1)
+    labels = labels[: per * num_clients].reshape(num_clients, per, -1)
+    counts = jnp.full((num_clients,), per, jnp.int32)
+    return SampleFedData(features, labels, counts)
+
+
+def partition_features(features, labels, num_clients) -> FeatureFedData:
+    """Split the P feature columns into I equal blocks (pad with zero cols)."""
+    n, p = features.shape
+    per = -(-p // num_clients)   # ceil
+    pad = per * num_clients - p
+    if pad:
+        features = jnp.pad(features, ((0, 0), (0, pad)))
+    blocks = features.reshape(n, num_clients, per).transpose(1, 0, 2)
+    return FeatureFedData(blocks, labels)
+
+
+# ---------------------------------------------------------------------------
+# sample-based rounds (Algorithm 1/2 steps 3-4)
+# ---------------------------------------------------------------------------
+
+
+def sample_batches(data: SampleFedData, key, batch_size: int):
+    """Step 4: each client randomly selects a mini-batch N_i^(t)."""
+    keys = jax.random.split(key, data.num_clients)
+
+    def pick(k, count):
+        return jax.random.randint(k, (batch_size,), 0, count)
+
+    return jax.vmap(pick)(keys, data.counts)        # (I, B)
+
+
+def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
+                 batch_size: int, with_value: bool = False):
+    """Computes client uploads q_i = Σ_{n∈batch} ∇f(ω;x_n) (and Σ f if asked)
+    then the server aggregate ĝ = Σ_i N_i/(BN) q_i  (and F̂ likewise).
+
+    Returns (grad_est, value_est, uploads) — `uploads` is everything that
+    crossed the client boundary (privacy-surface assertion hook).
+    """
+    idx = sample_batches(data, key, batch_size)      # (I, B)
+    n_total = data.total.astype(jnp.float32)
+
+    def client(feat_i, lab_i, idx_i):
+        zb = jnp.take(feat_i, idx_i, axis=0)
+        yb = jnp.take(lab_i, idx_i, axis=0)
+
+        def batch_sum_loss(p):
+            return jnp.sum(per_sample_loss(p, zb, yb))
+
+        val, q = jax.value_and_grad(batch_sum_loss)(params)
+        return q, val
+
+    q, val = jax.vmap(client)(data.features, data.labels, idx)   # pytree (I,...), (I,)
+    w = data.counts.astype(jnp.float32) / (batch_size * n_total)  # N_i/(BN)
+    grad_est = jax.tree.map(
+        lambda u: jnp.tensordot(w, u.astype(jnp.float32), axes=1), q)
+    value_est = jnp.dot(w, val)
+    uploads = {"q_grad_sums": q, "q_value_sums": val if with_value else None}
+    return grad_est, value_est, uploads
+
+
+# ---------------------------------------------------------------------------
+# feature-based rounds (Algorithm 3/4 steps 3-6) — the paper's MLP composition
+# ---------------------------------------------------------------------------
+
+
+def feature_round(params, data: FeatureFedData, key, batch_size: int,
+                  head_loss_from_h: Callable, client_h: Callable):
+    """Faithful Alg-3 information flow for f(ω;x) = g0(ω0, Σ_i h_i(ω_i, x_i)):
+
+      server picks N^(t)  →  client i computes h_i and broadcasts it  →
+      any client computes q_{f,0,0} = Σ_n ∇_{ω0} f  →  each client i computes
+      q_{f,0,i} = Σ_n ∇_{ω_i} f from (ω0, its block, all h_j)  →  server
+      aggregates with 1/B weights (eq. 16).
+
+    params: {"w0": head params, "blocks": (I, ...) client blocks}.
+    Returns (grad_est pytree like params, value_est, uploads).
+    """
+    n = data.total
+    idx = jax.random.randint(key, (batch_size,), 0, n)            # server-chosen
+    yb = jnp.take(data.labels, idx, axis=0)
+    zb = jnp.take(data.feature_blocks, idx, axis=1)               # (I, B, P_i)
+
+    # step 4: h-exchange — client i computes h_i on its block
+    h = jax.vmap(client_h)(params["blocks"], zb)                  # (I, B, J)
+    h_sum = jnp.sum(h, axis=0)
+
+    # step 5: q_{f,0,0} — head gradient from aggregated h only
+    def head_sum_loss(w0, h_sum_):
+        return jnp.sum(head_loss_from_h(w0, h_sum_, yb))
+
+    val, q00 = jax.value_and_grad(head_sum_loss)(params["w0"], h_sum)
+
+    # step 6: q_{f,0,i} — via chain rule through client i's own h_i
+    dl_dh = jax.grad(lambda hs: head_sum_loss(params["w0"], hs))(h_sum)  # (B, J)
+
+    def block_grad(block_i, zb_i):
+        _, vjp = jax.vjp(lambda bl: client_h(bl, zb_i), block_i)
+        return vjp(dl_dh)[0]
+
+    q0i = jax.vmap(block_grad)(params["blocks"], zb)              # (I, ...)
+
+    grad_est = {"w0": q00 / batch_size,
+                "blocks": q0i / batch_size}
+    value_est = val / batch_size
+    uploads = {"h_exchange": h, "q_head": q00, "q_blocks": q0i}
+    return grad_est, value_est, uploads
+
+
+def comm_load_per_round(mode: str, d: int, d_blocks: Sequence[int] = (),
+                        batch_size: int = 0, h_dim: int = 0,
+                        num_clients: int = 0, num_constraints: int = 0):
+    """Floats communicated per round (paper's per-round load accounting).
+
+    sample-based (Alg 1/2): each client uploads d (+M·(1+d)); server broadcasts d.
+    feature-based (Alg 3/4): h-exchange B·H·I·(I-1) between clients, block
+    gradients d_i up, broadcast d down.
+    """
+    m = num_constraints
+    if mode == "sample":
+        up = num_clients * (d + m * (1 + d))
+        down = num_clients * d
+        return {"up": up, "down": down, "total": up + down}
+    h_x = batch_size * h_dim * num_clients * (num_clients - 1) * (1 + m)
+    up = sum(d_blocks) * (1 + m) + (d - sum(d_blocks)) * (1 + m) + m * num_clients
+    down = num_clients * d
+    return {"up": up, "down": down, "h_exchange": h_x,
+            "total": up + down + h_x}

@@ -1,0 +1,185 @@
+"""SSCA as a composable optimizer over arbitrary param pytrees.
+
+This is the integration point for the model zoo: `ssca_init` / `ssca_step`
+behave like an optax-style (state, grad) -> state optimizer, implementing the
+paper's Algorithm 1/3 example updates exactly (eqs. (8)-(10)/(22)-(24), with
+the λ‖ω‖² regularizer folded into the same buffer — see DESIGN.md §2).
+
+`ssca_constrained_step` implements the Algorithm 2/4 example for the paper's
+constrained formulation (40): min ‖ω‖² s.t. mean-loss <= U, via Lemma 1.
+
+`momentum_sgd_form_*` implements eqs. (11)-(12) — the *identical* sequence as
+momentum SGD with momentum v^t and stepsize γ^t (Remark 2); tested to match
+ssca_step bit-for-bit-ish in tests/test_equivalence.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+from repro.core.solvers import lemma1_nu, solve_constrained_single
+from repro.core.surrogate import (QuadSurrogate, init_surrogate, tree_axpy,
+                                  tree_dot, tree_l2sq, tree_zeros_like,
+                                  update_surrogate)
+
+
+class SSCAState(NamedTuple):
+    params: object
+    g: object                 # linear surrogate buffer (eq. 9, λ folded)
+    t: jnp.ndarray            # 1-based round counter
+
+
+class SSCAConstrainedState(NamedTuple):
+    params: object
+    cons: QuadSurrogate       # constraint surrogate (g buffer + scalar d)
+    t: jnp.ndarray
+    nu: jnp.ndarray           # last dual value (diagnostic)
+    slack: jnp.ndarray        # last slack (Theorem 2: -> 0)
+
+
+def _sched(fl, t):
+    # the paper's examples choose ρ^(1) = 1 (§III-A, before eq. (11)): the
+    # t=1 surrogate is then a pure batch estimate, independent of the zero init.
+    rho_t = jnp.where(t == 1, 1.0, schedules.rho(t, fl.a1, fl.alpha_rho))
+    return rho_t, schedules.gamma(t, fl.a2, fl.alpha_gamma)
+
+
+# ---------------------------------------------------------------------------
+# unconstrained (Algorithm 1 / 3 example)
+# ---------------------------------------------------------------------------
+
+
+def ssca_init(params) -> SSCAState:
+    return SSCAState(params=params, g=tree_zeros_like(params, jnp.float32),
+                     t=jnp.ones((), jnp.int32))
+
+
+def ssca_step(state: SSCAState, grad, fl) -> SSCAState:
+    """grad: aggregated mini-batch gradient estimate of the *data* loss F
+    (the λ‖ω‖² regularizer is injected here, not in grad)."""
+    rho_t, gamma_t = _sched(fl, state.t)
+    lam, tau = fl.l2_lambda, fl.tau
+    # eq. (9) with 2λω folded (eq. 35): inj = ∇F̂ + 2λω - 2τω
+    g = jax.tree.map(
+        lambda b, gr, w: (1 - rho_t) * b
+        + rho_t * (gr.astype(jnp.float32) + (2 * lam - 2 * tau) * w.astype(jnp.float32)),
+        state.g, grad, state.params)
+    # eq. (10): ω̄ = -g/(2τ); eq. (5): ω ← (1-γ)ω + γω̄
+    params = jax.tree.map(
+        lambda w, b: ((1 - gamma_t) * w.astype(jnp.float32)
+                      + gamma_t * (-b / (2 * tau))).astype(w.dtype),
+        state.params, g)
+    return SSCAState(params=params, g=g, t=state.t + 1)
+
+
+# ---------------------------------------------------------------------------
+# momentum-SGD form (Remark 2, eqs. (11)-(12)) — same iterates as ssca_step
+# ---------------------------------------------------------------------------
+
+
+class MomentumForm(NamedTuple):
+    params: object
+    v: object
+    t: jnp.ndarray
+    gamma_prev: jnp.ndarray
+
+
+def momentum_form_init(params) -> MomentumForm:
+    return MomentumForm(params=params, v=tree_zeros_like(params, jnp.float32),
+                        t=jnp.ones((), jnp.int32),
+                        gamma_prev=jnp.zeros((), jnp.float32))
+
+
+def momentum_form_step(state: MomentumForm, grad, fl) -> MomentumForm:
+    """v^t = (1-ρ^t)(1-γ^(t-1)) v^(t-1) + (ρ^t/2τ) ĝ^t;  ω ← ω - γ^t v^t.
+
+    ĝ here is the gradient of the *full* objective incl. the regularizer
+    (∇F̂ + 2λω); with ρ^(1)=1 the iterates equal ssca_step exactly.
+    """
+    rho_t, gamma_t = _sched(fl, state.t)
+    full_grad = jax.tree.map(
+        lambda gr, w: gr.astype(jnp.float32) + 2 * fl.l2_lambda * w.astype(jnp.float32),
+        grad, state.params)
+    v = jax.tree.map(
+        lambda vv, gg: (1 - rho_t) * (1 - state.gamma_prev) * vv
+        + rho_t / (2 * fl.tau) * gg,
+        state.v, full_grad)
+    params = jax.tree.map(
+        lambda w, vv: (w.astype(jnp.float32) - gamma_t * vv).astype(w.dtype),
+        state.params, v)
+    return MomentumForm(params=params, v=v, t=state.t + 1, gamma_prev=gamma_t)
+
+
+# ---------------------------------------------------------------------------
+# constrained (Algorithm 2 / 4 example; formulation (40) via Lemma 1)
+# ---------------------------------------------------------------------------
+
+
+def ssca_constrained_init(params) -> SSCAConstrainedState:
+    return SSCAConstrainedState(
+        params=params, cons=init_surrogate(params), t=jnp.ones((), jnp.int32),
+        nu=jnp.zeros(()), slack=jnp.zeros(()))
+
+
+def ssca_constrained_step(state: SSCAConstrainedState, loss_grad, loss_value,
+                          fl) -> SSCAConstrainedState:
+    """min ‖ω‖² s.t. F(ω) <= U  (eq. 40). Objective is deterministic and kept
+    exact (τ0 = 1 quadratic); the loss constraint is approximated per (15)."""
+    rho_t, gamma_t = _sched(fl, state.t)
+    cons = update_surrogate(state.cons, rho_t, state.params, loss_grad,
+                            loss_value - fl.cost_limit, fl.tau)
+    # Lemma 1 closed form (g0 = 0): ν* then ω̄ = -ν g1 / (2(1 + ν τ))
+    b = tree_l2sq(cons.g)
+    nu = lemma1_nu(b, cons.d, fl.tau, fl.penalty_c)
+    t_ = 1.0 + nu * fl.tau
+    params = jax.tree.map(
+        lambda w, g1: ((1 - gamma_t) * w.astype(jnp.float32)
+                       + gamma_t * (-(nu * g1) / (2 * t_))).astype(w.dtype),
+        state.params, cons.g)
+    # slack at the solution: max(F̄_1(ω̄), 0)
+    gw = tree_dot(cons.g, jax.tree.map(lambda g1: -(nu * g1) / (2 * t_), cons.g))
+    wsq = (nu * nu) * b / (4 * t_ * t_)
+    slack = jnp.maximum(cons.d + gw + fl.tau * wsq, 0.0)
+    return SSCAConstrainedState(params=params, cons=cons, t=state.t + 1,
+                                nu=nu, slack=slack)
+
+
+class SSCAGeneralConstrainedState(NamedTuple):
+    """Full Algorithm 2/4 state: sampled objective + sampled constraint."""
+    params: object
+    obj_g: object             # objective linear buffer (eq. 9)
+    cons: QuadSurrogate       # constraint surrogate (eqs. as in §III-B example)
+    t: jnp.ndarray
+    nu: jnp.ndarray
+    slack: jnp.ndarray
+
+
+def ssca_general_constrained_init(params) -> SSCAGeneralConstrainedState:
+    return SSCAGeneralConstrainedState(
+        params=params, obj_g=tree_zeros_like(params, jnp.float32),
+        cons=init_surrogate(params), t=jnp.ones((), jnp.int32),
+        nu=jnp.zeros(()), slack=jnp.zeros(()))
+
+
+def ssca_general_constrained_step(state: SSCAGeneralConstrainedState, obj_grad,
+                                  cons_grad, cons_value,
+                                  fl) -> SSCAGeneralConstrainedState:
+    """Full Algorithm 2/4 example: both the objective and the constraint are
+    sampled nonconvex losses; Problem 5/10 solved by monotone bisection."""
+    rho_t, gamma_t = _sched(fl, state.t)
+    tau = fl.tau
+    obj_g = jax.tree.map(
+        lambda b, gr, w: (1 - rho_t) * b
+        + rho_t * (gr.astype(jnp.float32) - 2 * tau * w.astype(jnp.float32)),
+        state.obj_g, obj_grad, state.params)
+    cons = update_surrogate(state.cons, rho_t, state.params, cons_grad,
+                            cons_value - fl.cost_limit, tau)
+    sol = solve_constrained_single(obj_g, tau, cons, tau, fl.penalty_c)
+    params = tree_axpy(1 - gamma_t, state.params, gamma_t, sol.omega_bar)
+    params = jax.tree.map(lambda p, w: p.astype(w.dtype), params, state.params)
+    return SSCAGeneralConstrainedState(
+        params=params, obj_g=obj_g, cons=cons, t=state.t + 1,
+        nu=sol.nu[0], slack=sol.slack[0])

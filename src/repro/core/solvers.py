@@ -1,0 +1,130 @@
+"""Closed-form / jax.lax solvers for the convex approximate problems.
+
+Problem 2/7 (unconstrained):  argmin_ω gᵀω + τ‖ω‖²  =  -g/(2τ)     (eqs. 10/24)
+
+Problem 5/10 (constrained, exact-penalty with slacks):
+    min_ω,s   F̄_0(ω) + c Σ_m s_m   s.t.  F̄_m(ω) <= s_m,  s_m >= 0
+with F̄_0 = g_0ᵀω + τ_0‖ω‖² and F̄_m = d_m + g_mᵀω + τ_c‖ω‖².
+
+Dual: ω(ν) = -(g_0 + Σ ν_m g_m) / (2(τ_0 + τ_c Σ ν_m)), ν ∈ [0, c]^M.
+For M = 1 the root of φ(ν) = F̄_1(ω(ν)) is found by monotone bisection (φ is
+decreasing, = h'(ν) by the envelope theorem); the paper's Lemma 1 closed form
+(g_0 = 0, τ_0 = 1) is provided separately and tested against the bisection.
+For M > 1 we run projected gradient ascent on the concave dual — all control
+flow is jax.lax, everything operates on Gram-matrix scalars so the per-round
+cost beyond the gradient all-reduce is O(M²) scalars.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import QuadSurrogate, tree_axpy, tree_dot
+
+
+def solve_unconstrained(g, tau: float):
+    """argmin gᵀω + τ‖ω‖²  (eq. (10)/(24)). g: pytree -> ω̄ pytree."""
+    return jax.tree.map(lambda x: -x / (2.0 * tau), g)
+
+
+class ConstrainedSolution(NamedTuple):
+    omega_bar: object       # pytree
+    nu: jnp.ndarray         # (M,) dual variables in [0, c]
+    slack: jnp.ndarray      # (M,) optimal slack values
+
+
+def _gram(g0, gs: Sequence):
+    vecs = [g0] + list(gs)
+    n = len(vecs)
+    dots = jnp.stack([jnp.stack([tree_dot(vecs[i], vecs[j]) for j in range(n)])
+                      for i in range(n)])
+    return dots    # (1+M, 1+M)
+
+
+def _phi_single(nu, a00, a01, a11, d1, tau0, tauc):
+    """F̄_1(ω(ν)) for M=1, from Gram scalars."""
+    t = tau0 + nu * tauc
+    g1w = -(a01 + nu * a11) / (2.0 * t)
+    wsq = (a00 + 2.0 * nu * a01 + nu * nu * a11) / (4.0 * t * t)
+    return d1 + g1w + tauc * wsq
+
+
+def solve_constrained_single(g0, tau0: float, cons: QuadSurrogate, tauc: float,
+                             c: float, iters: int = 64) -> ConstrainedSolution:
+    """M=1 solver by bisection on the monotone φ(ν) over [0, c]."""
+    a = _gram(g0, [cons.g])
+    a00, a01, a11 = a[0, 0], a[0, 1], a[1, 1]
+    d1 = cons.d
+
+    phi0 = _phi_single(0.0, a00, a01, a11, d1, tau0, tauc)
+    phic = _phi_single(jnp.float32(c), a00, a01, a11, d1, tau0, tauc)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        pm = _phi_single(mid, a00, a01, a11, d1, tau0, tauc)
+        lo = jnp.where(pm > 0, mid, lo)
+        hi = jnp.where(pm > 0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (jnp.float32(0), jnp.float32(c)))
+    nu_root = 0.5 * (lo + hi)
+    nu = jnp.where(phi0 <= 0, 0.0, jnp.where(phic > 0, c, nu_root))
+
+    t = tau0 + nu * tauc
+    omega = jax.tree.map(lambda x0, x1: -(x0 + nu * x1) / (2.0 * t), g0, cons.g)
+    slack = jnp.maximum(_phi_single(nu, a00, a01, a11, d1, tau0, tauc), 0.0)
+    return ConstrainedSolution(omega, nu[None], slack[None])
+
+
+def lemma1_nu(b, d1, tau: float, c: float):
+    """The paper's Lemma 1 closed form (objective ‖ω‖², g0 = 0, τ0 = 1).
+
+    b = ‖g_1‖² (eq. 45);  d1 = C^t - U. Returns ν*.
+    """
+    disc = b - 4.0 * tau * d1               # = b + 4τ(U - C) with d1 = C - U
+    safe = jnp.maximum(disc, 1e-30)
+    nu_int = (jnp.sqrt(b / safe) - 1.0) / tau
+    nu_clip = jnp.clip(nu_int, 0.0, c)
+    return jnp.where(disc > 0, nu_clip, c)
+
+
+def solve_constrained_multi(g0, tau0: float, cons: Sequence[QuadSurrogate],
+                            tauc: float, c: float,
+                            iters: int = 200) -> ConstrainedSolution:
+    """General M: projected gradient ascent on the concave dual over [0,c]^M.
+
+    ∂h/∂ν_m = F̄_m(ω(ν)) (envelope theorem) — evaluated from Gram scalars only.
+    """
+    m = len(cons)
+    gs = [s.g for s in cons]
+    a = _gram(g0, gs)                       # (1+M, 1+M)
+    d = jnp.stack([s.d for s in cons])      # (M,)
+
+    def phi(nu):                            # (M,) -> (M,) constraint values
+        t = tau0 + tauc * jnp.sum(nu)
+        coef = jnp.concatenate([jnp.ones((1,)), nu])          # (1+M,)
+        gw = -(a @ coef) / (2.0 * t)                          # g_kᵀω for k=0..M
+        wsq = coef @ a @ coef / (4.0 * t * t)
+        return d + gw[1:] + tauc * wsq
+
+    # Lipschitz-safe stepsize from Gram magnitude
+    lr = 1.0 / (1e-8 + jnp.max(jnp.abs(a)) / (2.0 * tau0 * tau0) + tauc)
+
+    def body(_, nu):
+        return jnp.clip(nu + lr * phi(nu), 0.0, c)
+
+    nu = jax.lax.fori_loop(0, iters, body, jnp.zeros((m,)))
+    t = tau0 + tauc * jnp.sum(nu)
+
+    def comb(x0, *xs):
+        out = x0.astype(jnp.float32)
+        for w, xm in zip(nu, xs):
+            out = out + w * xm
+        return -out / (2.0 * t)
+
+    omega = jax.tree.map(comb, g0, *gs)
+    slack = jnp.maximum(phi(nu), 0.0)
+    return ConstrainedSolution(omega, nu, slack)

@@ -1,0 +1,79 @@
+"""Recursive convex surrogates (paper eqs. (3), (8)-(9), (14)-(15), (16), (25)).
+
+With the paper's quadratic surrogate choice
+    f̄(ω; ω', x) = f(ω'; x) + ∇f(ω'; x)ᵀ(ω-ω') + τ‖ω-ω'‖²          (7)/(15)
+the running surrogate  F̄^t(ω) = (1-ρ^t)F̄^(t-1)(ω) + ρ^t · [batch avg of f̄]
+collapses to the canonical quadratic form
+
+    F̄^t(ω) = d^t + (g^t)ᵀ ω + τ‖ω‖²
+
+whose state is one scalar d^t and one param-shaped buffer g^t with recursions
+
+    g^t = (1-ρ^t) g^(t-1) + ρ^t (ĝ^t - 2τ ω^t)                      (9)
+    d^t = (1-ρ^t) d^(t-1) + ρ^t (F̂^t - (ĝ^t)ᵀω^t + τ‖ω^t‖²)        (42)
+
+(d is only needed for constraints; the objective's d never enters argmin).
+ĝ^t / F̂^t are the mini-batch gradient / value estimates aggregated over clients
+with weights N_i/(BN) — in the distributed runtime that aggregation *is* the
+data-axis all-reduce.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_axpy(a, x, b, y):
+    """a*x + b*y over pytrees."""
+    return jax.tree.map(lambda u, v: a * u + b * v, x, y)
+
+
+def tree_dot(x, y):
+    return sum(jnp.vdot(u.astype(jnp.float32), v.astype(jnp.float32))
+               for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+
+def tree_l2sq(x):
+    return tree_dot(x, x)
+
+
+def tree_zeros_like(x, dtype=None):
+    return jax.tree.map(lambda u: jnp.zeros_like(u, dtype=dtype or u.dtype), x)
+
+
+class QuadSurrogate(NamedTuple):
+    """State of F̄^t(ω) = d + gᵀω + τ‖ω‖²."""
+    d: jnp.ndarray      # scalar
+    g: object           # pytree like params
+
+
+def init_surrogate(params, dtype=jnp.float32) -> QuadSurrogate:
+    return QuadSurrogate(d=jnp.zeros((), jnp.float32),
+                         g=tree_zeros_like(params, dtype))
+
+
+def update_surrogate(s: QuadSurrogate, rho_t, omega, grad_est, value_est,
+                     tau: float, extra_linear: float = 0.0) -> QuadSurrogate:
+    """One recursion step.
+
+    extra_linear adds a term ``extra_linear * ω`` to the injected gradient —
+    used to fold an exact-gradient regularizer (e.g. 2λω for λ‖ω‖², eq. (35)
+    folded; see DESIGN.md) into the same buffer.
+    """
+    inj = jax.tree.map(
+        lambda gr, w: gr.astype(jnp.float32) + (extra_linear - 2.0 * tau) * w.astype(jnp.float32),
+        grad_est, omega)
+    g = tree_axpy(1.0 - rho_t, s.g, rho_t, inj)
+    dval = value_est - tree_dot(grad_est, omega) + tau * tree_l2sq(omega)
+    d = (1.0 - rho_t) * s.d + rho_t * dval
+    return QuadSurrogate(d=d, g=g)
+
+
+def surrogate_value(s: QuadSurrogate, omega, tau: float):
+    return s.d + tree_dot(s.g, omega) + tau * tree_l2sq(omega)
+
+
+def surrogate_grad(s: QuadSurrogate, omega, tau: float):
+    return jax.tree.map(lambda g, w: g + 2.0 * tau * w.astype(jnp.float32), s.g, omega)

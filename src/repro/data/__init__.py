@@ -1,0 +1,2 @@
+from repro.data.synthetic import (classification_dataset, token_dataset,
+                                  make_batch_iterator)  # noqa: F401

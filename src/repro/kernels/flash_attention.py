@@ -1,0 +1,124 @@
+"""Flash attention Pallas TPU kernel (online softmax), with causal, sliding-
+window, and GQA support — the compute hot-spot of every assigned transformer.
+
+TPU adaptation (vs the CUDA flash-attention formulation):
+  - Tiling is BlockSpec-driven: Q tiles (BQ, D) stay resident in VMEM while
+    K/V tiles (BK, D) stream through; the running (m, l, acc) state lives in
+    VMEM scratch that persists across the innermost ("arbitrary") grid dim —
+    there is no warp-level shuffle; the MXU consumes (BQ x D) @ (D x BK)
+    tiles directly, so BQ/BK/D are kept multiples of 128 where possible.
+  - Sliding-window + causal masking prunes whole K/V tiles via pl.when on the
+    grid index, so the compiled FLOPs scale with the *visible* window.
+
+Layouts: q (B, H, Sq, D); k, v (B, KV, Sk, D); out (B, H, Sq, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, window: int, sq: int, sk: int,
+                  bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # global row/col positions of this tile (q right-aligned when sq < sk)
+    offs = sk - sq
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offs
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = True
+    if causal:
+        run = (ik * bk) <= (iq * bq + offs + bq - 1)          # tile not fully future
+    if window:
+        run = jnp.logical_and(run, (iq * bq + offs) - (ik * bk + bk - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                   # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        l_prev = l_sc[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_sc[...] = m_new
+        l_sc[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_sc[...]
+        out = acc_sc[...] / jnp.where(l == 0.0, 1.0, l)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale=None, block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0, "GQA requires H % KV == 0"
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, "seq lens must divide block sizes"
+    nq, nk = sq // bq, sk // bk
+    grid = (b, h, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        sq=sq, sk=sk, bq=bq, bk=bk, nk=nk)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

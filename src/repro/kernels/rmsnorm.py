@@ -1,0 +1,55 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Tiling: rows are blocked (BLOCK_ROWS at a time) with the full feature dim D in
+VMEM — D is at most 8192 in the zoo, so a (256, 8192) fp32 tile is 8 MiB,
+comfortably inside the ~16 MiB v5e VMEM budget together with the output tile.
+The reduction (mean of squares) and the (1+scale) multiply run in fp32 on the
+VPU; a single HBM read and write per element (vs 3 reads for the unfused
+mean/rsqrt/mul chain).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                     # (R, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale_ref[...].astype(jnp.float32))[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, eps: float = 1e-6,
+                   block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = False):
+    """x: (..., D); scale: (D,)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

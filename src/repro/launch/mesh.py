@@ -1,0 +1,108 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because smoke tests and benches run
+with 1 real CPU device while the dry-run forces 512 virtual host devices.
+
+Axes:
+  single-pod: (16, 16)      -> ("data", "model")          256 chips (one v5e pod)
+  multi-pod:  (2, 16, 16)   -> ("pod", "data", "model")   512 chips (2 pods)
+
+FL semantics (DESIGN.md §2): the ("pod","data") shards ARE the paper's clients;
+sample-based q-aggregation is the all-reduce over those axes. The "model" axis
+carries tensor/expert parallelism (and the feature-based ω_i blocks).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "run via launch/dryrun.py which forces 512 host devices")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global-batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def adapt_for_mesh(spec_tree, mesh):
+    """Rewrites activation/cache PartitionSpecs written against the single-pod
+    axis names: any 'data' entry becomes ('pod','data') on a multi-pod mesh.
+    Param specs are NOT adapted — FSDP stays within a pod (DCN-frugal)."""
+    if "pod" not in mesh.axis_names:
+        return spec_tree
+    def fix(spec):
+        if not isinstance(spec, P):
+            return spec
+        return P(*(("pod", "data") if e == "data" else e for e in spec))
+    return jax.tree.map(fix, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def fit_specs(spec_tree, shape_tree, mesh):
+    """Shape-aware spec repair: any PartitionSpec entry whose mesh-axis size
+    does not divide the corresponding dim is re-homed to the largest other
+    unassigned dim it divides (e.g. batch=1 decode caches shard the sequence
+    dim instead), else dropped. Keeps every (arch x shape x mesh) lowerable
+    without per-case hand specs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(e):
+        names = (e,) if isinstance(e, str) else tuple(e)
+        n = 1
+        for nm in names:
+            n *= sizes.get(nm, 1)
+        return n
+
+    def fit(spec, shp):
+        shape = shp.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = [None] * len(shape)
+        homeless = []
+        seen = set()
+        for i, e in enumerate(entries[: len(shape)]):
+            if e is None:
+                continue
+            names = (e,) if isinstance(e, str) else tuple(e)
+            if any(n in seen for n in names):   # an axis may appear only once
+                continue
+            seen.update(names)
+            if shape[i] % axis_size(e) == 0 and shape[i] >= axis_size(e):
+                out[i] = e
+            else:
+                homeless.append(e)
+        for e in homeless:
+            n = axis_size(e)
+            cands = [i for i in range(len(shape))
+                     if out[i] is None and shape[i] % n == 0 and shape[i] >= n]
+            if cands:
+                out[max(cands, key=lambda i: shape[i])] = e
+        return P(*out)
+
+    return jax.tree.map(fit, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_fitted(mesh, spec_tree, shape_tree):
+    return named(mesh, fit_specs(spec_tree, shape_tree, mesh))
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,109 @@
+"""Serving: prefill + batched one-token decode steps under pjit.
+
+Decode shapes (decode_32k / long_500k) lower `serve_step` — ONE new token
+against a seq_len-deep KV cache / SSM state — not train_step.
+
+CLI:  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \
+          --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import mesh as mesh_lib
+from repro.models import get_model
+
+
+_SEQ_CACHE_KEYS = ("k", "v", "attn_k", "attn_v", "self_k", "self_v")
+
+
+def grow_cache(cache, extra: int):
+    """Pad the sequence axis (axis 2: (L,B,S,KV,Hd)) of KV caches by `extra`
+    slots; O(1) SSM states pass through unchanged."""
+    return {k: (jnp.pad(v, ((0, 0), (0, 0), (0, extra)) + ((0, 0),) * (v.ndim - 3))
+                if k in _SEQ_CACHE_KEYS else v)
+            for k, v in cache.items()}
+
+
+def make_decode_step(model, cfg, greedy: bool = True):
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos, cfg)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def jit_decode_step(model, cfg, mesh):
+    step = make_decode_step(model, cfg)
+    pspec = mesh_lib.named(mesh, model.param_specs(cfg, mode="serve"))
+    cspec = mesh_lib.named(mesh, mesh_lib.adapt_for_mesh(model.cache_specs(cfg), mesh))
+    axes = mesh_lib.data_axes(mesh)
+    tspec = jax.sharding.NamedSharding(mesh, P(axes))
+    rspec = jax.sharding.NamedSharding(mesh, P())
+    return jax.jit(step, in_shardings=(pspec, cspec, tspec, rspec),
+                   out_shardings=(tspec, cspec))
+
+
+def generate(arch: str, *, smoke: bool = False, batch: int = 2,
+             prompt_len: int = 32, gen: int = 16, seed: int = 0):
+    """Single-host batched generation (greedy)."""
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    model = get_model(cfg)
+    if not model.has_decode:
+        raise ValueError(f"{arch} has no decode path")
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, cfg)
+
+    batch_in = {"tokens": jax.random.randint(
+        jax.random.fold_in(key, 1), (batch, prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch_in["prefix_embeddings"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (batch, cfg.num_prefix_tokens, cfg.d_model)).astype(cfg.dtype)
+    if cfg.family == "audio":
+        batch_in["frame_embeddings"] = jax.random.normal(
+            jax.random.fold_in(key, 3),
+            (batch, prompt_len * 4, cfg.d_model)).astype(cfg.dtype)
+
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cfg))(params, batch_in)
+    cache = grow_cache(cache, gen)   # room for the generated tokens
+    step_fn = jax.jit(make_decode_step(model, cfg))
+
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos = int(cache["pos"]) if "pos" in cache else prompt_len
+    t0 = time.time()
+    for i in range(gen - 1):
+        tok, cache = step_fn(params, cache, tok, jnp.asarray(pos + i, jnp.int32))
+        out.append(tok)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(out, axis=1)
+    return seqs, {"tokens_per_s": batch * (gen - 1) / max(dt, 1e-9)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    seqs, stats = generate(args.arch, smoke=args.smoke, batch=args.batch,
+                           prompt_len=args.prompt_len, gen=args.gen)
+    print("generated:", seqs)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Distributed training: the SSCA federated optimizer wrapped around any zoo
+model under pjit. The per-round client upload/aggregate of Algorithm 1/2 is
+realized by the data-axis all-reduce that pjit inserts for the batch-mean
+gradient (clients = data shards, equal N_i; see DESIGN.md §2/§7).
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+          --steps 100 --batch 8 --seq 512 [--constrained] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import FLConfig, get_config
+from repro.core import optimizer
+from repro.launch import mesh as mesh_lib
+from repro.models import get_model
+
+
+def make_train_step(model, cfg, fl: FLConfig):
+    """Returns train_step(state, batch) -> (state, metrics). Unconstrained
+    Algorithm-1-example update (= momentum SGD w/ diminishing stepsizes)."""
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
+        new = optimizer.ssca_step(state, grads, fl)
+        return new, {"loss": loss, "t": state.t}
+
+    return train_step
+
+
+def make_constrained_train_step(model, cfg, fl: FLConfig):
+    """Algorithm-2-example: min ‖ω‖² s.t. mean-loss <= U (formulation (40))."""
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
+        new = optimizer.ssca_constrained_step(state, grads, loss, fl)
+        return new, {"loss": loss, "nu": new.nu, "slack": new.slack,
+                     "l2": sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                               for x in jax.tree.leaves(new.params))}
+
+    return train_step
+
+
+def state_specs(model, cfg, constrained: bool):
+    ps = model.param_specs(cfg, mode="train")
+    if constrained:
+        return optimizer.SSCAConstrainedState(
+            params=ps,
+            cons=optimizer.QuadSurrogate(d=P(), g=ps),
+            t=P(), nu=P(), slack=P())
+    return optimizer.SSCAState(params=ps, g=ps, t=P())
+
+
+def batch_specs(batch_tree, mesh):
+    axes = mesh_lib.data_axes(mesh)
+    return jax.tree.map(lambda _: P(axes), batch_tree)
+
+
+def jit_train_step(model, cfg, fl, mesh, batch_like, constrained=False):
+    step = (make_constrained_train_step if constrained else make_train_step)(
+        model, cfg, fl)
+    sspec = mesh_lib.named(mesh, state_specs(model, cfg, constrained))
+    bspec = mesh_lib.named(mesh, batch_specs(batch_like, mesh))
+    return jax.jit(step, in_shardings=(sspec, bspec),
+                   out_shardings=(sspec, None))
+
+
+# ---------------------------------------------------------------------------
+# single-host training driver (CPU-runnable with reduced configs)
+# ---------------------------------------------------------------------------
+
+
+def train_loop(arch: str, steps: int, batch: int, seq: int, *,
+               smoke: bool = False, constrained: bool = False,
+               fl: Optional[FLConfig] = None, log_every: int = 10,
+               ckpt_path: Optional[str] = None, seed: int = 0):
+    from repro.data.synthetic import make_batch_iterator, token_dataset
+
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    fl = fl or FLConfig(a1=0.9, a2=0.5, alpha_rho=0.1, alpha_gamma=0.6,
+                        tau=0.2, l2_lambda=1e-5, cost_limit=3.0)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, cfg)
+    state = (optimizer.ssca_constrained_init(params) if constrained
+             else optimizer.ssca_init(params))
+
+    toks = token_dataset(jax.random.fold_in(key, 1), cfg.vocab_size,
+                         n_tokens=max(200_000, batch * (seq + 1) * 4))
+    it = make_batch_iterator(toks, batch, seq, jax.random.fold_in(key, 2))
+    step_fn = jax.jit((make_constrained_train_step if constrained
+                       else make_train_step)(model, cfg, fl))
+
+    logs = []
+    t0 = time.time()
+    for i in range(steps):
+        state, metrics = step_fn(state, next(it))
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["wall_s"] = time.time() - t0
+            logs.append(m)
+            print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                           for k, v in m.items()), flush=True)
+    if ckpt_path:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(ckpt_path, state.params, step=steps)
+    return state, logs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--constrained", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    train_loop(args.arch, args.steps, args.batch, args.seq, smoke=args.smoke,
+               constrained=args.constrained, ckpt_path=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

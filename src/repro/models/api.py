@@ -1,0 +1,53 @@
+"""Model registry: a uniform functional interface over the zoo.
+
+Every family exposes:
+  init(key, cfg) -> params
+  loss_fn(params, batch, cfg) -> scalar loss            (train path)
+  prefill(params, batch, cfg) -> (logits, cache)        (decode-capable families)
+  decode_step(params, cache, token, pos, cfg) -> (logits, cache)
+  init_cache(cfg, batch, max_seq) -> cache
+  param_specs(cfg, mode) / cache_specs(cfg) -> PartitionSpec pytrees
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from repro.models import encdec, mlp, transformer, xlstm, zamba
+
+
+@dataclass(frozen=True)
+class Model:
+    name: str
+    init: Callable
+    loss_fn: Callable
+    param_specs: Callable
+    prefill: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    init_cache: Optional[Callable] = None
+    cache_specs: Optional[Callable] = None
+
+    @property
+    def has_decode(self) -> bool:
+        return self.decode_step is not None
+
+
+def get_model(cfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        m = transformer
+    elif fam == "ssm":
+        m = xlstm
+    elif fam == "hybrid":
+        m = zamba
+    elif fam == "audio":
+        m = encdec
+    elif fam == "mlp":
+        return Model(name=cfg.name, init=mlp.zoo_init, loss_fn=mlp.zoo_loss_fn,
+                     param_specs=mlp.param_specs)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return Model(name=cfg.name, init=m.init, loss_fn=m.loss_fn,
+                 param_specs=m.param_specs, prefill=m.prefill,
+                 decode_step=m.decode_step, init_cache=m.init_cache,
+                 cache_specs=m.cache_specs)

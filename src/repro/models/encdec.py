@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (seamless-m4t style). The audio frontend
+(mel-spectrogram + conv feature extractor) is stubbed per the brief:
+``frame_embeddings`` (B, S_enc, D) arrive precomputed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_enc_layer(key, cfg):
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": L.attn_init(ks[0], cfg, dt),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def init_dec_layer(key, cfg):
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "self_attn": L.attn_init(ks[0], cfg, dt),
+        "ln_x": L.rmsnorm_init(cfg.d_model, dt),
+        "cross_attn": L.attn_init(ks[1], cfg, dt),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def init(key, cfg):
+    dt = _dt(cfg)
+    k_e, k_enc, k_dec = jax.random.split(key, 3)
+    return {
+        "embed": L.embed_init(k_e, (cfg.vocab_size, cfg.d_model), dt),
+        "encoder": jax.vmap(lambda k: init_enc_layer(k, cfg))(
+            jax.random.split(k_enc, cfg.encoder_layers)),
+        "decoder": jax.vmap(lambda k: init_dec_layer(k, cfg))(
+            jax.random.split(k_dec, cfg.n_layers)),
+        "ln_enc": L.rmsnorm_init(cfg.d_model, dt),
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, D) stubbed frontend embeddings -> encoder states."""
+    b, s, _ = frames.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    mask = jnp.ones((1, s, s), bool)
+
+    def body(h, lp):
+        h = h + L.attention(lp["attn"], L.norm(lp["ln1"], h, cfg),
+                            positions, cfg, mask=mask)
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), "gelu")
+        return L.shard_batch(h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body, L.shard_batch(frames.astype(_dt(cfg))), params["encoder"])
+    return L.norm(params["ln_enc"], h, cfg)
+
+
+def _cross_kv(lp, enc, cfg):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = enc.shape
+    k = (enc @ lp["wk"]).reshape(b, s, kv, hd)
+    v = (enc @ lp["wv"]).reshape(b, s, kv, hd)
+    return k, v
+
+
+def decode_stack(params, x, enc, positions, cfg, return_cache: bool = False):
+    b, s, _ = x.shape
+    self_mask = L.make_attention_mask(positions, positions, causal=True)
+
+    def body(h, lp):
+        hn = L.norm(lp["ln1"], h, cfg)
+        q, k, v = L._qkv(lp["self_attn"], hn, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L.dot_attention(q, k, v, self_mask,
+                            kv_heads_repeat=cfg.n_heads // cfg.n_kv_heads)
+        h = h + o.reshape(b, s, -1) @ lp["self_attn"]["wo"]
+        hx = L.norm(lp["ln_x"], h, cfg)
+        ck, cv = _cross_kv(lp["cross_attn"], enc, cfg)
+        qx = (hx @ lp["cross_attn"]["wq"]).reshape(b, s, cfg.n_heads,
+                                                   cfg.resolved_head_dim)
+        cm = jnp.ones((1, s, enc.shape[1]), bool)
+        o = L.dot_attention(qx, ck, cv, cm,
+                            kv_heads_repeat=cfg.n_heads // cfg.n_kv_heads)
+        h = h + o.reshape(b, s, -1) @ lp["cross_attn"]["wo"]
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), "gelu")
+        return L.shard_batch(h), ((k, v) if return_cache else None)
+
+    if not return_cache and cfg.remat:
+        body = jax.checkpoint(body)
+    h, kvs = jax.lax.scan(body, L.shard_batch(x), params["decoder"])
+    h = L.norm(params["ln_f"], h, cfg)
+    return (h, kvs) if return_cache else h
+
+
+def loss_fn(params, batch, cfg):
+    enc = encode(params, batch["frame_embeddings"], cfg)
+    tokens, targets = batch["tokens"], batch["targets"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(_dt(cfg))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    h = decode_stack(params, x, enc, positions, cfg)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    logits = L.shard_batch(logits, None, "model")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving: self-attn KV cache + precomputed per-layer cross K/V
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_seq, dtype=None, enc_len=None):
+    dt = dtype or _dt(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    enc_len = enc_len or max_seq
+    dec_len = min(max_seq, 4096)
+    return {
+        "self_k": jnp.zeros((cfg.n_layers, batch, dec_len, kv, hd), dt),
+        "self_v": jnp.zeros((cfg.n_layers, batch, dec_len, kv, hd), dt),
+        "cross_k": jnp.zeros((cfg.n_layers, batch, enc_len, kv, hd), dt),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, enc_len, kv, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg):
+    enc = encode(params, batch["frame_embeddings"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(_dt(cfg))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    h, (sk, sv) = decode_stack(params, x, enc, positions, cfg, return_cache=True)
+    logits = h[:, -1:, :] @ params["embed"].T.astype(h.dtype)
+
+    def kv_body(_, lp):
+        return None, _cross_kv(lp["cross_attn"], enc, cfg)
+    _, (ck, cv) = jax.lax.scan(kv_body, None, params["decoder"])
+    cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    b = token.shape[0]
+    x = params["embed"][token].astype(_dt(cfg))                  # (B,1,D)
+
+    def body(h, inp):
+        lp, sk, sv, ck, cv = inp
+        hn = L.norm(lp["ln1"], h, cfg)
+        o, sk, sv = L.attention_decode(lp["self_attn"], hn, sk, sv, pos, cfg)
+        h = h + o
+        hx = L.norm(lp["ln_x"], h, cfg)
+        q = (hx @ lp["cross_attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.resolved_head_dim)
+        cm = jnp.ones((1, 1, ck.shape[1]), bool)
+        o = L.dot_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), cm,
+                            kv_heads_repeat=cfg.n_heads // cfg.n_kv_heads)
+        h = h + o.reshape(b, 1, -1) @ lp["cross_attn"]["wo"]
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), "gelu")
+        return h, (sk, sv)
+
+    h, (sk, sv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = L.norm(params["ln_f"], h, cfg)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    new_cache = dict(cache, self_k=sk, self_v=sv, pos=cache["pos"] + 1)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, mode: str = "train"):
+    policy = cfg.train_sharding if mode == "train" else cfg.serve_sharding
+    fsdp = "data" if policy == "fsdp" else None
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+
+    def attn():
+        return {"wq": P(None, fsdp, "model"),
+                "wk": P(None, fsdp, "model" if kv_shardable else None),
+                "wv": P(None, fsdp, "model" if kv_shardable else None),
+                "wo": P(None, "model", fsdp)}
+
+    mlp_s = {"wi": P(None, fsdp, "model"), "wo": P(None, "model", fsdp)}
+    enc = {"ln1": {"scale": P(None, None)}, "attn": attn(),
+           "ln2": {"scale": P(None, None)}, "mlp": mlp_s}
+    dec = {"ln1": {"scale": P(None, None)}, "self_attn": attn(),
+           "ln_x": {"scale": P(None, None)}, "cross_attn": attn(),
+           "ln2": {"scale": P(None, None)}, "mlp": dict(mlp_s)}
+    return {"embed": P("model", fsdp), "encoder": enc, "decoder": dec,
+            "ln_enc": {"scale": P(None)}, "ln_f": {"scale": P(None)}}
+
+
+def cache_specs(cfg):
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+    spec = (P(None, "data", None, "model", None) if kv_shardable
+            else P(None, "data", "model", None, None))
+    return {"self_k": spec, "self_v": spec, "cross_k": spec, "cross_v": spec,
+            "pos": P()}

@@ -1,0 +1,106 @@
+"""The paper's application model (§V): a two-layer network for L-class
+classification — input P features, hidden J cells with swish activation
+S(z) = z·sigmoid(z), softmax output, cross-entropy loss (eq. 28).
+
+Parameters follow the paper exactly: ω0 = (ω_{0,l,j}) ∈ R^{L×J} output weights,
+ω1 = (ω_{1,j,p}) ∈ R^{J×P} hidden weights — no biases.
+
+The feature-based (vertical FL) helpers expose the paper's composition
+structure f(ω;x) = g0(ω0, (h_{0,i}(ω_i, x_{n,i}))_i): client i holds the columns
+ω1[:, P_i] and contributes the partial pre-activation h_i = z_i @ ω1[:,P_i].T;
+the full hidden pre-activation is Σ_i h_i.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def swish(z):
+    return z * jax.nn.sigmoid(z)
+
+
+def init(key, num_features: int, hidden: int, num_classes: int, dtype=jnp.float32):
+    k0, k1 = jax.random.split(key)
+    return {
+        "w0": (jax.random.normal(k0, (num_classes, hidden)) / jnp.sqrt(hidden)).astype(dtype),
+        "w1": (jax.random.normal(k1, (hidden, num_features)) / jnp.sqrt(num_features)).astype(dtype),
+    }
+
+
+def logits(params, z):
+    """z: (B, P) features -> (B, L) logits.  Q = softmax(w0 @ S(w1 z))."""
+    pre = z @ params["w1"].T              # (B, J)
+    return swish(pre) @ params["w0"].T    # (B, L)
+
+
+def per_sample_loss(params, z, y):
+    """Cross-entropy -Σ_l y_l log Q_l per sample. z: (B,P); y: (B,L) one-hot."""
+    lg = logits(params, z).astype(jnp.float32)
+    logq = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.sum(y * logq, axis=-1)    # (B,)
+
+
+def mean_loss(params, z, y):
+    return jnp.mean(per_sample_loss(params, z, y))
+
+
+def accuracy(params, z, labels):
+    return jnp.mean(jnp.argmax(logits(params, z), axis=-1) == labels)
+
+
+def l2_sq(params):
+    return sum(jnp.sum(jnp.square(p)) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# feature-based (vertical FL) composition structure
+# ---------------------------------------------------------------------------
+
+
+def feature_partition(num_features: int, num_clients: int) -> Sequence[jnp.ndarray]:
+    """Contiguous partition of feature indices P into P_i, i=1..I."""
+    sizes = [num_features // num_clients] * num_clients
+    for i in range(num_features % num_clients):
+        sizes[i] += 1
+    idx, out = 0, []
+    for s in sizes:
+        out.append(jnp.arange(idx, idx + s))
+        idx += s
+    return out
+
+
+def client_h(w1_block, z_block):
+    """h_{0,i}(ω_i, x_{n,i}) = z_i @ ω1[:,P_i].T : (B, J) partial pre-activation."""
+    return z_block @ w1_block.T
+
+
+def logits_from_h(w0, h_sum):
+    """g0 applied to the aggregated h: Q = softmax(w0 @ S(Σ_i h_i))."""
+    return swish(h_sum) @ w0.T
+
+
+def per_sample_loss_from_h(w0, h_sum, y):
+    lg = logits_from_h(w0, h_sum).astype(jnp.float32)
+    return -jnp.sum(y * jax.nn.log_softmax(lg, axis=-1), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# zoo integration (so the paper's own model also dry-runs / smokes)
+# ---------------------------------------------------------------------------
+
+
+def zoo_init(key, cfg):
+    # reuse ModelConfig fields: d_ff=J hidden, vocab_size=L classes, d_model=P feats
+    return init(key, cfg.d_model, cfg.d_ff, cfg.vocab_size, jnp.dtype(cfg.dtype))
+
+
+def zoo_loss_fn(params, batch, cfg):
+    return mean_loss(params, batch["features"], batch["labels_onehot"])
+
+
+def param_specs(cfg, mode: str = "train"):
+    return {"w0": P(None, "model"), "w1": P("model", None)}

@@ -1,0 +1,373 @@
+"""Sub-quadratic sequence mixers: chunked gated linear attention (the SSD /
+mamba2 dual form), mamba2 blocks, and xLSTM (mLSTM + sLSTM) blocks.
+
+All train-time paths are chunked (O(S·C + S·d·N) not O(S^2)); decode paths are
+O(1)-state recurrent updates, which is what makes ``long_500k`` runnable.
+
+Adaptations vs. the source papers (recorded in DESIGN.md):
+  - mLSTM input gate uses sigmoid (bounded) instead of exp+stabilizer; the
+    linear-attention structure and denominator normalization are preserved.
+  - mamba2 uses n_groups=1 (B/C shared across heads), scalar-per-head decay.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention
+#   H_t = a_t * H_{t-1} + k_t^T v_t ;  y_t = q_t @ H_t
+# ---------------------------------------------------------------------------
+
+
+def chunked_gla(q, k, v, log_a, chunk: int, initial_state=None):
+    """q,k: (B,H,S,Dk)  v: (B,H,S,Dv)  log_a: (B,H,S) with log_a <= 0.
+
+    Returns (y: (B,H,S,Dv), final_state: (B,H,Dk,Dv)).
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:  # pad tail (causal: padding only affects its own sliced-off outputs)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+        s_orig, s = s, s + pad
+    else:
+        s_orig = s
+    n = s // c
+    f32 = jnp.float32
+    qc = q.reshape(b, h, n, c, dk).astype(f32)
+    kc = k.reshape(b, h, n, c, dk).astype(f32)
+    vc = v.reshape(b, h, n, c, dv).astype(f32)
+    la = jnp.cumsum(log_a.reshape(b, h, n, c).astype(f32), axis=-1)   # within-chunk cum
+    la_end = la[..., -1:]                                             # (B,H,N,1)
+
+    # ---- intra-chunk (strictly causal incl. diagonal) ----
+    # score_ij = (q_i . k_j) * exp(la_i - la_j), j <= i  (la_i - la_j <= 0)
+    gap = la[..., :, None] - la[..., None, :]                         # (B,H,N,C,C)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal, jnp.exp(jnp.minimum(gap, 0.0)), 0.0)    # exp only where causal
+    w = jnp.einsum("bhncd,bhnkd->bhnck", qc, kc) * decay
+    y_intra = jnp.einsum("bhnck,bhnkv->bhncv", w, vc)
+
+    # ---- inter-chunk state recurrence ----
+    kd = kc * jnp.exp(la_end - la)[..., None]                         # decay to chunk end
+    s_chunk = jnp.einsum("bhnck,bhncv->bhnkv", kd, vc)                # (B,H,N,Dk,Dv)
+    a_chunk = jnp.exp(la_end[..., 0])                                 # (B,H,N)
+
+    def step(hstate, inp):
+        s_c, a_c = inp
+        h_prev = hstate
+        hstate = a_c[..., None, None] * hstate + s_c
+        return hstate, h_prev
+
+    init = (jnp.zeros((b, h, dk, dv), f32) if initial_state is None
+            else initial_state.astype(f32))
+    # scan over chunk axis (move N to front)
+    s_chunk_t = jnp.moveaxis(s_chunk, 2, 0)
+    a_chunk_t = jnp.moveaxis(a_chunk, 2, 0)
+    final_state, h_prevs = jax.lax.scan(step, init, (s_chunk_t, a_chunk_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 2)                             # (B,H,N,Dk,Dv)
+
+    y_inter = jnp.einsum("bhncd,bhndv->bhncv", qc * jnp.exp(la)[..., None], h_prevs)
+    y = (y_intra + y_inter).reshape(b, h, s, dv)[:, :, :s_orig, :]
+    return y.astype(v.dtype), final_state
+
+
+def gla_decode_step(state, q, k, v, log_a):
+    """One-step recurrence. state: (B,H,Dk,Dv); q,k: (B,H,Dk); v: (B,H,Dv);
+    log_a: (B,H). Returns (y: (B,H,Dv), new_state)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    new = a * state.astype(f32) + k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), new)
+    return y.astype(v.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _conv1d_init(key, width, channels, dtype):
+    return {"w": L.dense_init(key, (width, channels), dtype, fan_in=width),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def _causal_conv(p, x):
+    """x: (B, S, C) depthwise causal conv, width W."""
+    w = p["w"]                                  # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return out + p["b"]
+
+
+def _conv_decode(p, buf, x):
+    """buf: (B, W-1, C) previous inputs; x: (B, C). Returns (y, new_buf)."""
+    w = p["w"]
+    window = jnp.concatenate([buf, x[:, None, :]], axis=1)            # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + p["b"]
+    return y, window[:, 1:, :]
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    e = cfg.ssm_expand
+    di = e * d                        # inner dim
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.rmsnorm_init(d, dtype),
+        # fused in-proj: [x(di), z(di), B(n), C(n), dt(h)]
+        "w_in": L.dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype, fan_in=d),
+        "conv": _conv1d_init(ks[1], cfg.conv_width, di + 2 * n, dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e - 1), jnp.float32),  # softplus^-1(1)
+        "norm": L.rmsnorm_init(di, dtype),
+        "w_out": L.dense_init(ks[2], (di, d), dtype, fan_in=di),
+    }
+
+
+def _mamba2_proj(p, x, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    z = x @ p["w_in"]
+    xs, zgate, bmat, cmat, dt = jnp.split(z, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return xs, zgate, bmat, cmat, dt
+
+
+def _conv_tail(conv_in, width: int):
+    """Last (W-1) conv inputs, front-padded — the decode-time conv buffer."""
+    b, s, c = conv_in.shape
+    w = width - 1
+    if s >= w:
+        return conv_in[:, s - w:, :]
+    return jnp.pad(conv_in, ((0, 0), (w - s, 0), (0, 0)))
+
+
+def mamba2_block(p, x, cfg, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D). Chunked-scan training path."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    ph = di // h                                   # per-head dim
+    y = L.norm(p["ln"], x, cfg)
+    xs, zgate, bmat, cmat, dt = _mamba2_proj(p, y, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(p["conv"], conv_in))
+    xs, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    log_a = -dt * jnp.exp(p["a_log"])                                 # <= 0
+    v = (xs * dt.repeat(ph, axis=-1).astype(xs.dtype)).reshape(b, s, h, ph)
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n))
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, h, n))
+    yh, final = chunked_gla(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), log_a.transpose(0, 2, 1),
+                            cfg.chunk_size)
+    yh = yh.transpose(0, 2, 1, 3).reshape(b, s, di)
+    yh = L.norm(p["norm"], yh, cfg) * jax.nn.silu(zgate)
+    out = x + yh @ p["w_out"]
+    if return_state:
+        return out, {"state": final, "conv": _conv_tail(conv_in, cfg.conv_width)}
+    return out
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    ph = di // h
+    return {"state": jnp.zeros((batch, h, n, ph), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype)}
+
+
+def mamba2_decode(p, st, x, cfg):
+    """x: (B, D) one token. Returns (y: (B,D), new_state)."""
+    b, d = x.shape
+    di = cfg.ssm_expand * d
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    ph = di // h
+    y = L.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)[:, 0, :]
+    xs, zgate, bmat, cmat, dt = _mamba2_proj(p, y, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    cy, new_conv = _conv_decode(p["conv"], st["conv"], conv_in)
+    cy = jax.nn.silu(cy)
+    xs, bmat, cmat = jnp.split(cy, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,H)
+    log_a = -dt * jnp.exp(p["a_log"])
+    v = (xs * dt.repeat(ph, axis=-1).astype(xs.dtype)).reshape(b, h, ph)
+    q = jnp.broadcast_to(cmat[:, None, :], (b, h, n))
+    k = jnp.broadcast_to(bmat[:, None, :], (b, h, n))
+    yh, new_state = gla_decode_step(st["state"].transpose(0, 1, 2, 3), q, k, v, log_a)
+    yh = yh.reshape(b, di)
+    yh = L.rmsnorm(p["norm"], yh[:, None, :], cfg.norm_eps)[:, 0, :] * jax.nn.silu(zgate)
+    return x + yh @ p["w_out"], {"state": new_state, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, linear attention) + sLSTM (scalar, sequential)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.rmsnorm_init(d, dtype),
+        "wq": L.dense_init(ks[0], (d, d), dtype),
+        "wk": L.dense_init(ks[1], (d, d), dtype),
+        "wv": L.dense_init(ks[2], (d, d), dtype),
+        "wz": L.dense_init(ks[3], (d, d), dtype),       # output gate branch
+        "wif": L.dense_init(ks[4], (d, 2 * h), dtype),  # input & forget gate pre-acts
+        "norm": L.rmsnorm_init(d, dtype),
+        "wo": L.dense_init(ks[5], (d, d), dtype),
+        "conv": _conv1d_init(ks[6], cfg.conv_width, d, dtype),
+    }
+
+
+def _mlstm_qkvg(p, y, cfg):
+    b, s, d = y.shape
+    h = cfg.n_heads
+    hd = d // h
+    c = jax.nn.silu(_causal_conv(p["conv"], y))
+    q = (c @ p["wq"]).reshape(b, s, h, hd)
+    k = (c @ p["wk"]).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = (y @ p["wv"]).reshape(b, s, h, hd)
+    gates = (y @ p["wif"]).astype(jnp.float32).reshape(b, s, h, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 0])            # forget (decay)
+    gi = jax.nn.sigmoid(gates[..., 1])                   # input (bounded; see DESIGN)
+    return q, k, v, log_f, gi
+
+
+def mlstm_block(p, x, cfg, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    y = L.norm(p["ln"], x, cfg)
+    q, k, v, log_f, gi = _mlstm_qkvg(p, y, cfg)
+    k = k * gi[..., None].astype(k.dtype)
+    # denominator: append a ones column to v -> last channel integrates weights
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    ya, final = chunked_gla(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v_aug.transpose(0, 2, 1, 3), log_f.transpose(0, 2, 1),
+                            cfg.chunk_size)
+    ya = ya.transpose(0, 2, 1, 3)
+    num, den = ya[..., :hd], ya[..., hd:]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    out = out.reshape(b, s, d)
+    out = L.norm(p["norm"], out, cfg) * jax.nn.silu(y @ p["wz"])
+    out = x + out @ p["wo"]
+    if return_state:
+        return out, {"state": final, "conv": _conv_tail(y, cfg.conv_width)}
+    return out
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    return {"state": jnp.zeros((batch, h, hd, hd + 1), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype)}
+
+
+def mlstm_decode(p, st, x, cfg):
+    b, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    y = L.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)[:, 0, :]
+    c, new_conv = _conv_decode(p["conv"], st["conv"], y)
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"]).reshape(b, h, hd)
+    k = (c @ p["wk"]).reshape(b, h, hd) / math.sqrt(hd)
+    v = (y @ p["wv"]).reshape(b, h, hd)
+    gates = (y @ p["wif"]).astype(jnp.float32).reshape(b, h, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 0])
+    gi = jax.nn.sigmoid(gates[..., 1])
+    k = k * gi[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    ya, new_state = gla_decode_step(st["state"], q, k, v_aug, log_f)
+    num, den = ya[..., :hd], ya[..., hd:]
+    out = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(b, d)
+    out = L.rmsnorm(p["norm"], out[:, None, :], cfg.norm_eps)[:, 0, :] \
+        * jax.nn.silu(y @ p["wz"])
+    return x + out @ p["wo"], {"state": new_state, "conv": new_conv}
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": L.rmsnorm_init(d, dtype),
+        "w": L.dense_init(ks[0], (d, 4 * d), dtype),           # z,i,f,o pre-acts
+        "r": L.dense_init(ks[1], (h, hd, 4 * hd), dtype, fan_in=hd),  # block-diag recurrence
+        "norm": L.rmsnorm_init(d, dtype),
+        "wo": L.dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_cell(p, carry, wx, cfg):
+    """carry: (c, n, hprev) each (B, H, Hd); wx: (B, 4D) input pre-activations."""
+    c, n, hprev = carry
+    b = wx.shape[0]
+    d = cfg.d_model
+    h_, hd = cfg.n_heads, d // cfg.n_heads
+    rec = jnp.einsum("bhd,hdk->bhk", hprev, p["r"])            # (B,H,4Hd)
+    pre = wx.reshape(b, h_, 4 * hd) + rec
+    z, i, f, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c = f * c + i * z
+    n = f * n + i
+    hnew = o * c / jnp.maximum(n, 1.0)
+    return (c, n, hnew), hnew
+
+
+def slstm_block(p, x, cfg, return_state: bool = False):
+    b, s, d = x.shape
+    h_, hd = cfg.n_heads, d // cfg.n_heads
+    y = L.norm(p["ln"], x, cfg)
+    wx = y @ p["w"]                                            # (B,S,4D)
+    init = tuple(jnp.zeros((b, h_, hd), jnp.float32) for _ in range(3))
+    (c, n, hh), hs = jax.lax.scan(lambda cr, w: _slstm_cell(p, cr, w, cfg),
+                                  init, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = L.norm(p["norm"], hs, cfg)
+    out = x + out @ p["wo"]
+    if return_state:
+        return out, {"c": c, "n": n, "h": hh}
+    return out
+
+
+def slstm_init_state(cfg, batch):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    return {"c": jnp.zeros((batch, h, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "h": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+def slstm_decode(p, st, x, cfg):
+    b, d = x.shape
+    y = L.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)[:, 0, :]
+    wx = y @ p["w"]
+    (c, n, h), hnew = _slstm_cell(p, (st["c"], st["n"], st["h"]), wx, cfg)
+    hs = hnew.reshape(b, d).astype(x.dtype)
+    out = L.rmsnorm(p["norm"], hs[:, None, :], cfg.norm_eps)[:, 0, :]
+    return x + out @ p["wo"], {"c": c, "n": n, "h": h}

@@ -1,0 +1,292 @@
+"""Decoder-only transformer LM: dense (llama/gemma/qwen/glm style), MoE, and
+VLM-backbone (prefix-LM over stubbed patch embeddings) variants.
+
+Layer stack is scanned (stacked params, leading L axis) to keep HLO small enough
+for 512-virtual-device dry-run compiles on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg):
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": L.attn_init(ks[0], cfg, dt),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.moe_init(ks[1], cfg, dt)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def init(key, cfg):
+    dt = _dt(cfg)
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(k_out, (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(lp, x, positions, cfg, mask):
+    h = x + L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg),
+                        positions, cfg, mask=mask)
+    y = L.norm(lp["ln2"], h, cfg)
+    if cfg.n_experts:
+        moe_fn = (L.moe_expert_parallel if cfg.moe_sharding == "expert_parallel"
+                  else L.moe)
+        m, aux = moe_fn(lp["moe"], y, cfg)
+    else:
+        m, aux = L.mlp(lp["mlp"], y, cfg.activation), jnp.float32(0)
+    return h + m, aux
+
+
+def backbone(params, x, positions, cfg, mask=None):
+    """x: (B, S, D) embedded inputs -> (B, S, D) final-normed states, aux loss."""
+    if mask is None and cfg.attention_impl != "chunked":
+        mask = L.make_attention_mask(positions, positions, causal=True,
+                                     window=cfg.sliding_window)
+    # §Perf knob: sequence-parallel residual stream (psum -> reduce-scatter)
+    seq_axis = "model" if cfg.seq_shard_activations else None
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _block(lp, h, positions, cfg, mask)
+        h = L.shard_batch(h, seq_axis)   # keep clients (= data shards) resident
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x = L.shard_batch(x)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["layers"])
+    return L.norm(params["ln_f"], x, cfg), aux
+
+
+def embed(params, tokens, cfg):
+    return params["embed"][tokens].astype(_dt(cfg)) * jnp.sqrt(float(cfg.d_model)).astype(_dt(cfg))
+
+
+def logits_fn(params, h, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return h @ w.astype(h.dtype)
+
+
+def _inputs_to_states(params, batch, cfg):
+    """Handles plain LM and VLM prefix-LM inputs; returns (h, positions, mask,
+    text_start) where loss applies from text_start onwards."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params, tokens, cfg)
+    if cfg.num_prefix_tokens and "prefix_embeddings" in batch:
+        pref = batch["prefix_embeddings"].astype(x.dtype)          # (B, Pfx, D)
+        x = jnp.concatenate([pref, x], axis=1)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        mask = L.make_attention_mask(positions, positions, causal=True,
+                                     window=cfg.sliding_window,
+                                     prefix_len=pref.shape[1])
+        return x, positions, mask, pref.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    return x, positions, None, 0
+
+
+def loss_fn(params, batch, cfg):
+    """Mean next-token cross-entropy (+ MoE aux). batch: tokens (B,S), targets (B,S)."""
+    x, positions, mask, text_start = _inputs_to_states(params, batch, cfg)
+    h, aux = backbone(params, x, positions, cfg, mask)
+    h = h[:, text_start:, :]
+    logits = logits_fn(params, h, cfg).astype(jnp.float32)
+    logits = L.shard_batch(logits, None, "model")   # vocab over model axis
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + 0.01 * aux / max(1, cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_seq, dtype=None):
+    dt = dtype or _dt(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, kv, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(params, batch, cfg):
+    """Full-sequence forward producing last-position logits and a filled cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x, positions, mask, _ = _inputs_to_states(params, batch, cfg)
+    if mask is None and cfg.attention_impl != "chunked":
+        mask = L.make_attention_mask(positions, positions, causal=True,
+                                     window=cfg.sliding_window)
+
+    def body(h, lp):
+        hn = L.norm(lp["ln1"], h, cfg)
+        q, k, v = L._qkv(lp["attn"], hn, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        if cfg.attention_impl == "chunked":
+            bq, sq = h.shape[0], h.shape[1]
+            if rep > 1:
+                kvh, hd = k.shape[2], k.shape[3]
+                kf = jnp.broadcast_to(k[:, :, :, None, :],
+                                      (bq, sq, kvh, rep, hd)).reshape(bq, sq, cfg.n_heads, hd)
+                vf = jnp.broadcast_to(v[:, :, :, None, :],
+                                      (bq, sq, kvh, rep, hd)).reshape(bq, sq, cfg.n_heads, hd)
+            else:
+                kf, vf = k, v
+            o = L.chunked_attention(q, kf, vf, positions, positions, causal=True,
+                                    window=cfg.sliding_window,
+                                    block=cfg.attention_block)
+        else:
+            o = L.dot_attention(q, k, v, mask, kv_heads_repeat=rep)
+        h = h + o.reshape(h.shape[0], h.shape[1], -1) @ lp["attn"]["wo"]
+        y = L.norm(lp["ln2"], h, cfg)
+        if cfg.n_experts:
+            moe_fn = (L.moe_expert_parallel
+                      if cfg.moe_sharding == "expert_parallel" else L.moe)
+            m, _ = moe_fn(lp["moe"], y, cfg)
+        else:
+            m = L.mlp(lp["mlp"], y, cfg.activation)
+        return L.shard_batch(h + m), (k, v)
+
+    (h), kvs = jax.lax.scan(body, L.shard_batch(x), params["layers"])
+    h = L.norm(params["ln_f"], h, cfg)
+    logits = logits_fn(params, h[:, -1:, :], cfg)
+    cache = {"k": kvs[0], "v": kvs[1]}
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """One-token decode. token: (B, 1) int32; cache from init_cache/prefill."""
+    x = embed(params, token, cfg)
+
+    def body(h, inp):
+        lp, ck, cv = inp
+        hn = L.norm(lp["ln1"], h, cfg)
+        o, ck, cv = L.attention_decode(lp["attn"], hn, ck, cv, pos, cfg,
+                                       window=cfg.sliding_window)
+        h = h + o
+        y = L.norm(lp["ln2"], h, cfg)
+        if cfg.n_experts:
+            moe_fn = (L.moe_expert_parallel
+                      if cfg.moe_sharding == "expert_parallel" else L.moe)
+            m, _ = moe_fn(lp["moe"], y, cfg)
+        else:
+            m = L.mlp(lp["mlp"], y, cfg.activation)
+        return h + m, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    h = L.norm(params["ln_f"], h, cfg)
+    logits = logits_fn(params, h, cfg)
+    return logits, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, mode: str = "train"):
+    """PartitionSpec pytree matching init(). mode: train (fsdp|tp) / serve (tp)."""
+    policy = cfg.train_sharding if mode == "train" else cfg.serve_sharding
+    fsdp = "data" if policy == "fsdp" else None
+    kv_shardable = cfg.n_kv_heads % 16 == 0  # can kv-head dim split the model axis?
+
+    attn = {
+        "wq": P(None, fsdp, "model"),
+        "wk": P(None, fsdp, "model" if kv_shardable else None),
+        "wv": P(None, fsdp, "model" if kv_shardable else None),
+        "wo": P(None, "model", fsdp),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": P(None, "model"),
+                     "bk": P(None, "model" if kv_shardable else None),
+                     "bv": P(None, "model" if kv_shardable else None)})
+    lp = {"ln1": {"scale": P(None, None)}, "ln2": {"scale": P(None, None)}, "attn": attn}
+    if cfg.n_experts:
+        if cfg.moe_sharding == "expert_parallel":
+            # experts resident on the model axis, replicated over data
+            moe = {
+                "router": P(None, None, None),
+                "wi": P(None, "model", None, None),
+                "wg": P(None, "model", None, None),
+                "wo": P(None, "model", None, None),
+            }
+            if cfg.dense_residual:
+                moe["dense"] = {"wi": P(None, None, "model"),
+                                "wg": P(None, None, "model"),
+                                "wo": P(None, "model", None)}
+        elif cfg.moe_sharding == "expert2d":
+            # §Perf: expert-parallel (model axis) x ffn-dim (data axis) 2D
+            # sharding — weights stay resident, no per-step FSDP all-gathers
+            moe = {
+                "router": P(None, None, None),
+                "wi": P(None, "model", None, "data"),
+                "wg": P(None, "model", None, "data"),
+                "wo": P(None, "model", "data", None),
+            }
+        else:
+            moe = {
+                "router": P(None, fsdp, None),
+                "wi": P(None, "model", fsdp, None),
+                "wg": P(None, "model", fsdp, None),
+                "wo": P(None, "model", None, fsdp),
+            }
+        if cfg.dense_residual:
+            moe["dense"] = {"wi": P(None, fsdp, "model"),
+                            "wg": P(None, fsdp, "model"),
+                            "wo": P(None, "model", fsdp)}
+        lp["moe"] = moe
+    else:
+        lp["mlp"] = {"wi": P(None, fsdp, "model"),
+                     "wg": P(None, fsdp, "model"),
+                     "wo": P(None, "model", fsdp)}
+        if cfg.activation == "gelu":
+            del lp["mlp"]["wg"]
+    specs = {"embed": P("model", fsdp), "layers": lp, "ln_f": {"scale": P(None)}}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(fsdp, "model")
+    return specs
+
+
+def cache_specs(cfg):
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+    # batch over data; kv-heads over model when divisible, else sequence over model
+    if kv_shardable:
+        spec = P(None, "data", None, "model", None)
+    else:
+        spec = P(None, "data", "model", None, None)
+    return {"k": spec, "v": spec}

@@ -1,0 +1,208 @@
+"""xLSTM language model (arXiv:2405.04517): repeating groups of mLSTM blocks with
+an sLSTM block closing each group. 48L = 6 groups x (7 mLSTM + 1 sLSTM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import ssm
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _groups(cfg):
+    unit = len(cfg.block_pattern) or 8
+    n_m = (cfg.block_pattern or ("m",) * 7 + ("s",)).count("m")
+    g = max(1, cfg.n_layers // unit)
+    return g, n_m, unit - n_m  # groups, m per group, s per group
+
+
+def init(key, cfg):
+    dt = _dt(cfg)
+    g, n_m, n_s = _groups(cfg)
+    k_e, k_m, k_s = jax.random.split(key, 3)
+    mk = jax.random.split(k_m, g * n_m).reshape(g, n_m, 2)
+    sk = jax.random.split(k_s, g * max(1, n_s)).reshape(g, max(1, n_s), 2)
+    params = {
+        "embed": L.embed_init(k_e, (cfg.vocab_size, cfg.d_model), dt),
+        "m_blocks": jax.vmap(jax.vmap(lambda k: ssm.mlstm_init(k, cfg, dt)))(mk),
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if n_s:
+        params["s_blocks"] = jax.vmap(jax.vmap(lambda k: ssm.slstm_init(k, cfg, dt)))(sk)
+    return params
+
+
+def backbone(params, x, cfg):
+    g, n_m, n_s = _groups(cfg)
+
+    def group(h, gp):
+        def m_body(h, mp):
+            return L.shard_batch(ssm.mlstm_block(mp, h, cfg)), None
+        m_body = jax.checkpoint(m_body) if cfg.remat else m_body
+        h, _ = jax.lax.scan(m_body, h, gp["m"])
+        if n_s:
+            def s_body(h, sp):
+                return L.shard_batch(ssm.slstm_block(sp, h, cfg)), None
+            h, _ = jax.lax.scan(s_body, h, gp["s"])
+        return h, None
+
+    gp = {"m": params["m_blocks"]}
+    if n_s:
+        gp["s"] = params["s_blocks"]
+    x, _ = jax.lax.scan(group, L.shard_batch(x), gp)
+    return L.norm(params["ln_f"], x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    tokens, targets = batch["tokens"], batch["targets"]
+    x = params["embed"][tokens].astype(_dt(cfg))
+    h = backbone(params, x, cfg)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    logits = L.shard_batch(logits, None, "model")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving (O(1) state decode -> long_500k capable)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_seq, dtype=None):
+    del max_seq  # state size is O(1) in sequence length
+    dt = dtype or _dt(cfg)
+    g, n_m, n_s = _groups(cfg)
+
+    def stack(fn, outer, inner):
+        one = fn()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (outer, inner) + a.shape), one)
+
+    cache = {"m": stack(lambda: ssm.mlstm_init_state(cfg, batch, dt), g, n_m),
+             "pos": jnp.zeros((), jnp.int32)}
+    if n_s:
+        cache["s"] = stack(lambda: ssm.slstm_init_state(cfg, batch), g, n_s)
+    return cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    g, n_m, n_s = _groups(cfg)
+    x = params["embed"][token[:, 0]].astype(_dt(cfg))     # (B, D)
+
+    def group(h, inp):
+        gp, st = inp
+
+        def m_body(h, ps):
+            mp, mst = ps
+            h, new = ssm.mlstm_decode(mp, mst, h, cfg)
+            return h, new
+        h, new_m = jax.lax.scan(m_body, h, (gp["m"], st["m"]))
+        new = {"m": new_m}
+        if n_s:
+            def s_body(h, ps):
+                sp, sst = ps
+                h, ns = ssm.slstm_decode(sp, sst, h, cfg)
+                return h, ns
+            h, new_s = jax.lax.scan(s_body, h, (gp["s"], st["s"]))
+            new["s"] = new_s
+        return h, new
+
+    gp = {"m": params["m_blocks"]}
+    st = {"m": cache["m"]}
+    if n_s:
+        gp["s"] = params["s_blocks"]
+        st["s"] = cache["s"]
+    h, new_states = jax.lax.scan(group, x, (gp, st))
+    h = L.rmsnorm(params["ln_f"], h[:, None, :], cfg.norm_eps)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    new_states["pos"] = cache["pos"] + 1
+    return logits, new_states
+
+
+def prefill(params, batch, cfg):
+    """Chunked forward over the prompt that also emits every block's final
+    recurrent state (the chunked scan's inter-chunk carry), so decode continues
+    exactly where the prompt left off."""
+    g, n_m, n_s = _groups(cfg)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(_dt(cfg))
+
+    def group(h, gp):
+        def m_body(h, mp):
+            h, st = ssm.mlstm_block(mp, h, cfg, return_state=True)
+            return L.shard_batch(h), st
+        h, m_states = jax.lax.scan(m_body, h, gp["m"])
+        out = {"m": m_states}
+        if n_s:
+            def s_body(h, sp):
+                h, st = ssm.slstm_block(sp, h, cfg, return_state=True)
+                return L.shard_batch(h), st
+            h, s_states = jax.lax.scan(s_body, h, gp["s"])
+            out["s"] = s_states
+        return h, out
+
+    gp = {"m": params["m_blocks"]}
+    if n_s:
+        gp["s"] = params["s_blocks"]
+    h, states = jax.lax.scan(group, L.shard_batch(x), gp)
+    h = L.norm(params["ln_f"], h, cfg)
+    logits = h[:, -1:, :] @ params["embed"].T.astype(h.dtype)
+    states["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, states
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, mode: str = "train"):
+    policy = cfg.train_sharding if mode == "train" else cfg.serve_sharding
+    fsdp = "data" if policy == "fsdp" else None
+    g2 = (None, None)  # group, index-in-group
+
+    def mb():
+        return {
+            "ln": {"scale": P(*g2, None)},
+            "wq": P(*g2, fsdp, "model"), "wk": P(*g2, fsdp, "model"),
+            "wv": P(*g2, fsdp, "model"), "wz": P(*g2, fsdp, "model"),
+            "wif": P(*g2, fsdp, None),
+            "norm": {"scale": P(*g2, None)},
+            "wo": P(*g2, "model", fsdp),
+            "conv": {"w": P(*g2, None, "model"), "b": P(*g2, "model")},
+        }
+
+    def sb():
+        return {
+            "ln": {"scale": P(*g2, None)},
+            "w": P(*g2, fsdp, "model"),
+            "r": P(*g2, None, None, None),
+            "norm": {"scale": P(*g2, None)},
+            "wo": P(*g2, "model", fsdp),
+        }
+
+    g, n_m, n_s = _groups(cfg)
+    specs = {"embed": P("model", fsdp), "m_blocks": mb(),
+             "ln_f": {"scale": P(None)}}
+    if n_s:
+        specs["s_blocks"] = sb()
+    return specs
+
+
+def cache_specs(cfg):
+    g, n_m, n_s = _groups(cfg)
+    # few heads (4) don't divide the model axis -> shard the per-head dim instead
+    m = {"state": P(None, None, "data", None, "model", None),
+         "conv": P(None, None, "data", None, "model")}
+    specs = {"m": m, "pos": P()}
+    if n_s:
+        s = {k: P(None, None, "data", None, "model") for k in ("c", "n", "h")}
+        specs["s"] = s
+    return specs

@@ -1,0 +1,263 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with a single
+*shared* attention+MLP block applied every ``shared_attn_every`` Mamba blocks.
+The shared block consumes concat(hidden, original embedding) projected back to
+d_model (adaptation of Zamba2's 2x-width shared block; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import ssm
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _layout(cfg):
+    k = cfg.shared_attn_every or 6
+    groups = cfg.n_layers // k
+    rest = cfg.n_layers - groups * k
+    return k, groups, rest
+
+
+def init(key, cfg):
+    dt = _dt(cfg)
+    k_e, k_m, k_a, k_c, k_f = jax.random.split(key, 5)
+    mk = jax.random.split(k_m, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(k_e, (cfg.vocab_size, cfg.d_model), dt),
+        "mamba": jax.vmap(lambda k: ssm.mamba2_init(k, cfg, dt))(mk),
+        "shared": {
+            "w_cat": L.dense_init(k_c, (2 * cfg.d_model, cfg.d_model), dt),
+            "ln1": L.rmsnorm_init(cfg.d_model, dt),
+            "attn": L.attn_init(k_a, cfg, dt),
+            "ln2": L.rmsnorm_init(cfg.d_model, dt),
+            "mlp": L.mlp_init(k_f, cfg.d_model, cfg.d_ff, "geglu", dt),
+        },
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    return params
+
+
+def _grouped(tree, k, groups):
+    head = jax.tree.map(lambda a: a[: groups * k].reshape((groups, k) + a.shape[1:]), tree)
+    rest = jax.tree.map(lambda a: a[groups * k:], tree)
+    return head, rest
+
+
+def _shared_attn(sp, h, x0, positions, cfg, mask):
+    cat = jnp.concatenate([h, x0], axis=-1) @ sp["w_cat"]
+    a = L.attention(sp["attn"], L.norm(sp["ln1"], cat, cfg),
+                    positions, cfg, mask=mask)
+    h = h + a
+    h = h + L.mlp(sp["mlp"], L.norm(sp["ln2"], h, cfg), "geglu")
+    return h
+
+
+def backbone(params, x, positions, cfg, mask=None):
+    k, groups, rest = _layout(cfg)
+    if mask is None and cfg.attention_impl != "chunked":
+        mask = L.make_attention_mask(positions, positions, causal=True,
+                                     window=cfg.sliding_window)
+    head, tail = _grouped(params["mamba"], k, groups)
+    x0 = x
+
+    def group(h, gp):
+        def m_body(h, mp):
+            return L.shard_batch(ssm.mamba2_block(mp, h, cfg)), None
+        m_body = jax.checkpoint(m_body) if cfg.remat else m_body
+        h, _ = jax.lax.scan(m_body, h, gp)
+        h = L.shard_batch(_shared_attn(params["shared"], h, x0, positions, cfg, mask))
+        return h, None
+
+    x, _ = jax.lax.scan(group, L.shard_batch(x), head)
+
+    def m_body(h, mp):
+        return ssm.mamba2_block(mp, h, cfg), None
+    x, _ = jax.lax.scan(m_body, x, tail)
+    return L.norm(params["ln_f"], x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    tokens, targets = batch["tokens"], batch["targets"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(_dt(cfg))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    h = backbone(params, x, positions, cfg)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    logits = L.shard_batch(logits, None, "model")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving: Mamba O(1) states + one KV cache per shared-attn application
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_seq, dtype=None):
+    dt = dtype or _dt(cfg)
+    k, groups, rest = _layout(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    one = ssm.mamba2_init_state(cfg, batch, dt)
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one),
+        "attn_k": jnp.zeros((groups, batch, max_seq, kv, hd), dt),
+        "attn_v": jnp.zeros((groups, batch, max_seq, kv, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, token, pos, cfg):
+    k, groups, rest = _layout(cfg)
+    x = params["embed"][token[:, 0]].astype(_dt(cfg))          # (B, D)
+    x0 = x
+    head_p, tail_p = _grouped(params["mamba"], k, groups)
+    head_s, tail_s = _grouped(cache["mamba"], k, groups)
+
+    def group(h, inp):
+        gp, gs, ck, cv = inp
+
+        def m_body(h, ps):
+            mp, mst = ps
+            h, new = ssm.mamba2_decode(mp, mst, h, cfg)
+            return h, new
+        h, new_m = jax.lax.scan(m_body, h, (gp, gs))
+        cat = (jnp.concatenate([h, x0], axis=-1) @ params["shared"]["w_cat"])[:, None, :]
+        a, ck, cv = L.attention_decode(
+            params["shared"]["attn"],
+            L.norm(params["shared"]["ln1"], cat, cfg),
+            ck, cv, pos, cfg, window=cfg.sliding_window)
+        h = h + a[:, 0, :]
+        y = L.rmsnorm(params["shared"]["ln2"], h[:, None, :], cfg.norm_eps)
+        h = h + L.mlp(params["shared"]["mlp"], y, "geglu")[:, 0, :]
+        return h, (new_m, ck, cv)
+
+    h, (new_head, new_k, new_v) = jax.lax.scan(
+        group, x, (head_p, head_s, cache["attn_k"], cache["attn_v"]))
+
+    def m_body(h, ps):
+        mp, mst = ps
+        h, new = ssm.mamba2_decode(mp, mst, h, cfg)
+        return h, new
+    h, new_tail = jax.lax.scan(m_body, h, (tail_p, tail_s))
+
+    new_mamba = jax.tree.map(
+        lambda a, b: jnp.concatenate(
+            [a.reshape((groups * k,) + a.shape[2:]), b], axis=0),
+        new_head, new_tail)
+    h = L.rmsnorm(params["ln_f"], h[:, None, :], cfg.norm_eps)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    new_cache = {"mamba": new_mamba, "attn_k": new_k, "attn_v": new_v,
+                 "pos": cache["pos"] + 1}
+    return logits, new_cache
+
+
+def _shared_attn_kv(sp, h, x0, positions, cfg, mask):
+    """_shared_attn variant that also returns the (rope'd) K/V for the cache."""
+    b, s, _ = h.shape
+    cat = jnp.concatenate([h, x0], axis=-1) @ sp["w_cat"]
+    hn = L.norm(sp["ln1"], cat, cfg)
+    q, k, v = L._qkv(sp["attn"], hn, cfg)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.attention_impl == "chunked":
+        o = L.chunked_attention(q, k, v, positions, positions, causal=True,
+                                window=cfg.sliding_window,
+                                block=cfg.attention_block)
+    else:
+        o = L.dot_attention(q, k, v, mask,
+                            kv_heads_repeat=cfg.n_heads // cfg.n_kv_heads)
+    h = h + o.reshape(b, s, -1) @ sp["attn"]["wo"]
+    h = h + L.mlp(sp["mlp"], L.norm(sp["ln2"], h, cfg), "geglu")
+    return h, (k, v)
+
+
+def prefill(params, batch, cfg):
+    """Forward over the prompt emitting all Mamba final states and the shared
+    attention block's per-application K/V cache."""
+    k_, groups, rest = _layout(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(_dt(cfg))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    mask = (None if cfg.attention_impl == "chunked" else
+            L.make_attention_mask(positions, positions, causal=True,
+                                  window=cfg.sliding_window))
+    head_p, tail_p = _grouped(params["mamba"], k_, groups)
+    x0 = x
+
+    def m_body(h, mp):
+        h, st = ssm.mamba2_block(mp, h, cfg, return_state=True)
+        return L.shard_batch(h), st
+
+    def group(h, gp):
+        h, sts = jax.lax.scan(m_body, h, gp)
+        h, (kk, vv) = _shared_attn_kv(params["shared"], h, x0, positions, cfg, mask)
+        return L.shard_batch(h), (sts, kk, vv)
+
+    h, (head_states, ks, vs) = jax.lax.scan(group, L.shard_batch(x), head_p)
+    h, tail_states = jax.lax.scan(m_body, h, tail_p)
+
+    mamba_states = jax.tree.map(
+        lambda a, t: jnp.concatenate(
+            [a.reshape((groups * k_,) + a.shape[2:]), t], axis=0),
+        head_states, tail_states)
+    h = L.norm(params["ln_f"], h, cfg)
+    logits = h[:, -1:, :] @ params["embed"].T.astype(h.dtype)
+    cache = {"mamba": mamba_states, "attn_k": ks, "attn_v": vs,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, mode: str = "train"):
+    policy = cfg.train_sharding if mode == "train" else cfg.serve_sharding
+    fsdp = "data" if policy == "fsdp" else None
+    mamba = {
+        "ln": {"scale": P(None, None)},
+        "w_in": P(None, fsdp, "model"),
+        "conv": {"w": P(None, None, "model"), "b": P(None, "model")},
+        "a_log": P(None, None),
+        "dt_bias": P(None, None),
+        "norm": {"scale": P(None, None)},
+        "w_out": P(None, "model", fsdp),
+    }
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+    attn = {
+        "wq": P(fsdp, "model"),
+        "wk": P(fsdp, "model" if kv_shardable else None),
+        "wv": P(fsdp, "model" if kv_shardable else None),
+        "wo": P("model", fsdp),
+    }
+    shared = {
+        "w_cat": P(fsdp, "model"),
+        "ln1": {"scale": P(None)},
+        "attn": attn,
+        "ln2": {"scale": P(None)},
+        "mlp": {"wi": P(fsdp, "model"), "wg": P(fsdp, "model"),
+                "wo": P("model", fsdp)},
+    }
+    return {"embed": P("model", fsdp), "mamba": mamba, "shared": shared,
+            "ln_f": {"scale": P(None)}}
+
+
+def cache_specs(cfg):
+    kv_shardable = cfg.n_kv_heads % 16 == 0
+    attn_spec = (P(None, "data", None, "model", None) if kv_shardable
+                 else P(None, "data", "model", None, None))
+    return {
+        "mamba": {"state": P(None, "data", None, None, "model"),
+                  "conv": P(None, "data", None, "model")},
+        "attn_k": attn_spec, "attn_v": attn_spec, "pos": P(),
+    }

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, collective_bytes_from_hlo,  # noqa: F401
+                                     model_flops, roofline_terms)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches run on the single real CPU device. The 512-device
+# override lives ONLY in launch/dryrun.py (per the brief).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,41 @@
+"""Integration test of the multi-pod dry-run path itself (deliverable (e)).
+
+Runs launch/dryrun.py in a subprocess (it needs 512 virtual devices, which
+must never leak into this test process) for the cheapest arch on both meshes
+and checks lower+compile succeeded and the roofline fields are populated.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
+def test_dryrun_mnist_mlp_both_meshes(tmp_path, flags):
+    out = str(tmp_path / "r.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mnist-mlp",
+         "--shape", "train_4k", "--json", out] + flags,
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    r = json.load(open(out))[0]
+    assert r["status"] == "ok"
+    assert r["chips"] == (512 if flags else 256)
+    assert r["flops"] > 0 and r["bytes"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_config_override(tmp_path):
+    out = str(tmp_path / "r.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mnist-mlp",
+         "--shape", "train_4k", "--set", "dtype=float32", "--json", out],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.load(open(out))[0]["status"] == "ok"

@@ -1,0 +1,121 @@
+"""Federated protocol invariants: aggregation correctness, client-count
+independence, the privacy surface (only B-summed statistics leave a client),
+and communication-load accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fed
+from repro.models import mlp
+
+P, J, L = 12, 6, 3
+
+
+def _data(key, n=240):
+    z = jax.random.normal(key, (n, P))
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, L)
+    return z, jax.nn.one_hot(lab, L)
+
+
+def psl(p, z, y):
+    return mlp.per_sample_loss(p, z, y)
+
+
+def test_weighted_aggregation_equals_global_batch_gradient():
+    """Σ_i N_i/(BN) q_i with equal N_i must equal the plain mini-batch mean
+    gradient computed over the union of the selected samples."""
+    key = jax.random.PRNGKey(0)
+    z, y = _data(key)
+    params = mlp.init(jax.random.PRNGKey(1), P, J, L)
+    data = fed.partition_samples(z, y, 4)
+    B = 10
+    grad_est, val_est, up = fed.sample_round(psl, params, data, key, B,
+                                             with_value=True)
+    # recompute by hand from the same PRNG-selected indices
+    idx = fed.sample_batches(data, key, B)
+    zs = jnp.concatenate([data.features[i][idx[i]] for i in range(4)])
+    ys = jnp.concatenate([data.labels[i][idx[i]] for i in range(4)])
+    ref = jax.grad(lambda p: jnp.mean(mlp.per_sample_loss(p, zs, ys)))(params)
+    for a, b in zip(jax.tree.leaves(grad_est), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        float(val_est), float(jnp.mean(mlp.per_sample_loss(params, zs, ys))),
+        rtol=2e-4)
+
+
+def test_unequal_client_sizes_weighting():
+    """Ragged N_i: weights must be N_i/(BN), not 1/I."""
+    key = jax.random.PRNGKey(2)
+    z, y = _data(key, n=100)
+    params = mlp.init(jax.random.PRNGKey(1), P, J, L)
+    counts = jnp.array([70, 30], jnp.int32)
+    features = jnp.zeros((2, 70, P)).at[0].set(z[:70]).at[1, :30].set(z[70:])
+    labels = jnp.zeros((2, 70, L)).at[0].set(y[:70]).at[1, :30].set(y[70:])
+    data = fed.SampleFedData(features, labels, counts)
+    B = 5
+    grad_est, _, _ = fed.sample_round(psl, params, data, key, B)
+    idx = fed.sample_batches(data, key, B)
+    g0 = jax.grad(lambda p: jnp.sum(mlp.per_sample_loss(
+        p, features[0][idx[0]], labels[0][idx[0]])))(params)
+    g1 = jax.grad(lambda p: jnp.sum(mlp.per_sample_loss(
+        p, features[1][idx[1]], labels[1][idx[1]])))(params)
+    ref = jax.tree.map(lambda a, b: (70 * a / B + 30 * b / B) / 100.0, g0, g1)
+    for a, b in zip(jax.tree.leaves(grad_est), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+
+
+def test_privacy_surface_only_batch_sums():
+    """The uploads structure contains exactly the q-statistics of the paper:
+    B-summed gradients (and values), nothing per-sample."""
+    key = jax.random.PRNGKey(0)
+    z, y = _data(key)
+    params = mlp.init(jax.random.PRNGKey(1), P, J, L)
+    data = fed.partition_samples(z, y, 4)
+    B = 10
+    _, _, up = fed.sample_round(psl, params, data, key, B, with_value=True)
+    # every upload leaf is (I, ...param-shaped) — no B-sized leading dims
+    for leaf in jax.tree.leaves(up["q_grad_sums"]):
+        assert leaf.shape[0] == 4
+        assert B not in leaf.shape[1:], "per-sample data crossed the boundary"
+    assert up["q_value_sums"].shape == (4,)
+
+
+def test_feature_round_equals_full_gradient():
+    """Alg-3 info collection (h-exchange + chain rule) must reproduce the
+    full autodiff gradient of the composed loss."""
+    key = jax.random.PRNGKey(4)
+    z, y = _data(key)
+    data = fed.partition_features(z, y, 3)
+    pi = data.feature_blocks.shape[-1]
+    w1 = jax.random.normal(key, (3, J, pi)) * 0.3
+    w0 = jax.random.normal(jax.random.fold_in(key, 1), (L, J)) * 0.3
+    params = {"w0": w0, "blocks": w1}
+    B = 16
+    grad_est, val, up = fed.feature_round(
+        params, data, key, B, mlp.per_sample_loss_from_h, mlp.client_h)
+
+    idx = jax.random.randint(key, (B,), 0, data.total)
+    zb = jnp.take(data.feature_blocks, idx, axis=1)
+    yb = jnp.take(data.labels, idx, axis=0)
+
+    def full_loss(p):
+        hsum = sum(mlp.client_h(p["blocks"][i], zb[i]) for i in range(3))
+        return jnp.mean(mlp.per_sample_loss_from_h(p["w0"], hsum, yb))
+
+    ref = jax.grad(full_loss)(params)
+    for a, b in zip(jax.tree.leaves(grad_est), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+    # privacy surface: h-exchange is (I, B, J) — feature blocks never leave
+    assert up["h_exchange"].shape == (3, B, J)
+
+
+def test_comm_load_accounting():
+    d = 1000
+    r = fed.comm_load_per_round("sample", d, num_clients=10)
+    assert r["up"] == 10 * d and r["down"] == 10 * d
+    r = fed.comm_load_per_round("sample", d, num_clients=10, num_constraints=1)
+    assert r["up"] == 10 * (d + 1 + d)
+    r = fed.comm_load_per_round("feature", d, d_blocks=[90] * 10,
+                                batch_size=8, h_dim=6, num_clients=10)
+    assert r["h_exchange"] == 8 * 6 * 10 * 9

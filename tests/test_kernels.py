@@ -1,0 +1,84 @@
+"""Per-kernel allclose vs the pure-jnp oracle: shape/dtype sweeps, all in
+Pallas interpret mode (the kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssca_update import ssca_update_pallas
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (3, 7, 256), (1, 1024), (2, 37, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape).astype(dtype)
+    sc = (jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],)) * 0.1)
+    got = rmsnorm_pallas(x, sc, interpret=True, block_rows=16)
+    want = ref.rmsnorm_ref(x, sc)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [17, 1000, 4096, 70000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssca_update_matches_ref(n, dtype):
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (n,)).astype(dtype)
+    buf = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (n,)).astype(dtype)
+    rho, gamma, tau, lam = 0.7, 0.25, 0.2, 1e-4
+    gw, gb = ssca_update_pallas(w, buf, g, rho, gamma, tau, lam,
+                                block=8192, interpret=True)
+    ww, wb = ref.ssca_update_ref(w, buf, g, rho, gamma, tau, lam)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(gw, np.float32),
+                               np.asarray(ww, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(wb), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,sq,sk,d", [
+    (1, 4, 4, 128, 128, 64),       # MHA square
+    (2, 8, 2, 128, 128, 64),       # GQA
+    (1, 8, 1, 64, 256, 128),       # MQA, right-aligned decode-ish window
+    (1, 4, 4, 256, 256, 32),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 96), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, kv, sq, sk, d, causal, window, dtype):
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (b, h, sq, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, sk, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, sk, d)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_blocks_fully_masked_rows():
+    """Sliding window that masks whole K tiles must not produce NaNs."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 2, 256, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 32))
+    got = flash_attention_pallas(q, k, v, causal=True, window=32,
+                                 block_q=64, block_k=64, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_ops_dispatch_ref_on_cpu():
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (4, 64))
+    sc = jnp.zeros((64,))
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, sc)),
+                               np.asarray(ref.rmsnorm_ref(x, sc)), rtol=1e-6)

@@ -1,0 +1,108 @@
+"""Framework-property tests: checkpoint/resume bit-equivalence for SSCA
+training (params + surrogate state), streaming-data rounds (paper footnote 3),
+and fit_specs invariants (hypothesis)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import FLConfig
+from repro.core import fed, optimizer
+from repro.data.synthetic import classification_dataset
+from repro.models import mlp
+
+
+def test_ssca_checkpoint_resume_equivalence(tmp_path):
+    """Saving (params, surrogate buffer, t) at round 10 and resuming must
+    reproduce the uninterrupted run exactly — the surrogate state is part of
+    the algorithm, not a disposable optimizer detail."""
+    key = jax.random.PRNGKey(0)
+    (z, y, _), _ = classification_dataset(key, n=1000, num_features=16,
+                                          num_classes=3, test_n=10)
+    data = fed.partition_samples(z, y, 2)
+    params0 = mlp.init(jax.random.PRNGKey(1), 16, 8, 3)
+    fl = FLConfig(batch_size=16, tau=0.2, l2_lambda=1e-4, alpha_gamma=0.6)
+
+    def psl(p, zz, yy):
+        return mlp.per_sample_loss(p, zz, yy)
+
+    def run(state, start, stop, key):
+        for t in range(start, stop):
+            g, _, _ = fed.sample_round(psl, state.params, data,
+                                       jax.random.fold_in(key, t), fl.batch_size)
+            state = optimizer.ssca_step(state, g, fl)
+        return state
+
+    key_r = jax.random.PRNGKey(2)
+    full = run(optimizer.ssca_init(params0), 0, 20, key_r)
+
+    half = run(optimizer.ssca_init(params0), 0, 10, key_r)
+    path = str(tmp_path / "state.msgpack")
+    save_checkpoint(path, half, step=10)
+    restored, step = load_checkpoint(path, optimizer.ssca_init(params0))
+    assert step == 10
+    resumed = run(optimizer.SSCAState(*restored), 10, 20, key_r)
+
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_streaming_data_rounds():
+    """Footnote 3: SSCA over streaming data — each round sees fresh samples
+    (never revisited); the surrogate's incremental averaging still converges."""
+    key = jax.random.PRNGKey(3)
+    params = mlp.init(jax.random.PRNGKey(1), 16, 8, 3)
+    fl = FLConfig(batch_size=64, tau=0.2, l2_lambda=1e-5, a1=0.9, a2=0.5,
+                  alpha_rho=0.1, alpha_gamma=0.6)
+    state = optimizer.ssca_init(params)
+    protos = jax.random.normal(jax.random.fold_in(key, 9), (3, 16)) * 0.5
+    losses = []
+    for t in range(200):
+        kt = jax.random.fold_in(key, t)          # a fresh stream batch
+        lab = jax.random.randint(kt, (fl.batch_size,), 0, 3)
+        zb = protos[lab] + jax.random.normal(
+            jax.random.fold_in(kt, 1), (fl.batch_size, 16)) * 0.5
+        yb = jax.nn.one_hot(lab, 3)
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean(mlp.per_sample_loss(p, zb, yb)))(state.params)
+        state = optimizer.ssca_step(state, g, fl)
+        if t % 40 == 0:
+            losses.append(float(loss))
+    assert losses[-1] < losses[0] and np.isfinite(losses).all()
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(1, 4), st.lists(st.integers(1, 6), min_size=1, max_size=4),
+       st.integers(0, 3))
+def test_fit_specs_always_lowerable(nspec, dim_factors, seed):
+    """fit_specs must always return a spec whose every entry divides its dim
+    and never assigns one mesh axis twice."""
+    import os
+    from repro.launch.mesh import fit_specs
+
+    # fake mesh object with axis sizes
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 2)
+    rng = np.random.RandomState(seed)
+    dims = tuple(int(f) * int(rng.choice([1, 2, 4])) for f in dim_factors)
+    entries = list(rng.choice(["data", "model", None], size=min(nspec, len(dims))))
+    spec = P(*entries)
+    shp = jax.ShapeDtypeStruct(dims, jnp.float32)
+    fitted = fit_specs(spec, shp, FakeMesh)
+    sizes = {"data": 4, "model": 2}
+    used = []
+    for i, e in enumerate(fitted):
+        if e is None:
+            continue
+        names = (e,) if isinstance(e, str) else e
+        n = 1
+        for nm in names:
+            n *= sizes[nm]
+            used.append(nm)
+        assert dims[i] % n == 0, (fitted, dims)
+    assert len(used) == len(set(used)), f"axis used twice: {fitted}"

@@ -1,0 +1,116 @@
+"""Unit + property tests for stepsize schedules and convex-subproblem solvers."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import schedules
+from repro.core.solvers import (lemma1_nu, solve_constrained_multi,
+                                solve_constrained_single, solve_unconstrained)
+from repro.core.surrogate import (QuadSurrogate, init_surrogate, surrogate_grad,
+                                  surrogate_value, tree_dot, tree_l2sq,
+                                  update_surrogate)
+
+
+def test_schedule_conditions():
+    assert schedules.check_conditions(0.9, 0.5, 0.1, 0.6) == []
+    # the paper's own empirical setting violates (6) strictly
+    bad = schedules.check_conditions(0.9, 0.5, 0.1, 0.1)
+    assert len(bad) == 2
+    assert float(schedules.rho(1, 0.9, 0.1)) <= 1.0
+    assert float(schedules.gamma(10**6, 0.5, 0.6)) < 1e-3
+
+
+def test_unconstrained_solver_is_argmin():
+    g = {"a": jnp.array([1.0, -2.0]), "b": jnp.array([[0.5]])}
+    tau = 0.3
+    w = solve_unconstrained(g, tau)
+    # gradient of gᵀω + τ‖ω‖² at ω̄ must vanish
+    grad = jax.tree.map(lambda gg, ww: gg + 2 * tau * ww, g, w)
+    assert max(abs(float(jnp.max(jnp.abs(x)))) for x in jax.tree.leaves(grad)) < 1e-6
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 2.0), st.floats(-3.0, 3.0),
+       st.floats(0.05, 2.0))
+def test_single_constraint_kkt(seed, tau, d1, tau0):
+    """Property: the bisection solution satisfies the KKT conditions of
+    Problem 5 (M=1) — primal feasibility w.r.t. slack, stationarity, and
+    complementary slackness."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    g0 = jax.random.normal(k1, (8,))
+    g1 = jax.random.normal(k2, (8,))
+    c = 10.0
+    cons = QuadSurrogate(d=jnp.float32(d1), g=g1)
+    sol = solve_constrained_single(g0, tau0, cons, tau, c)
+    w, nu, s = sol.omega_bar, float(sol.nu[0]), float(sol.slack[0])
+    # stationarity: g0 + 2 τ0 ω + ν (g1 + 2 τ ω) = 0
+    stat = g0 + 2 * tau0 * w + nu * (g1 + 2 * tau * w)
+    assert float(jnp.max(jnp.abs(stat))) < 1e-2 * (1 + nu)
+    f1 = d1 + float(g1 @ w) + tau * float(w @ w)
+    # primal feasibility with slack
+    assert f1 <= s + 1e-3
+    # complementary slackness: s > 0 only if ν = c
+    if s > 1e-5:
+        assert abs(nu - c) < 1e-3
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.floats(-1.0, 1.0))
+def test_multi_matches_single(seed, d1):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    g0 = jax.random.normal(k1, (6,))
+    g1 = jax.random.normal(k2, (6,))
+    tau = 0.4
+    cons = QuadSurrogate(d=jnp.float32(d1), g=g1)
+    s1 = solve_constrained_single(g0, tau, cons, tau, 5.0)
+    sm = solve_constrained_multi(g0, tau, [cons], tau, 5.0, iters=3000)
+    np.testing.assert_allclose(np.asarray(s1.omega_bar),
+                               np.asarray(sm.omega_bar), atol=2e-2)
+
+
+def test_lemma1_matches_bisection():
+    """The paper's Lemma 1 closed form (g0 = 0, τ0 = 1) vs generic bisection."""
+    key = jax.random.PRNGKey(3)
+    g1 = jax.random.normal(key, (32,))
+    for d1 in (-0.5, 0.0, 0.3, 5.0):
+        tau, c = 0.2, 100.0
+        cons = QuadSurrogate(d=jnp.float32(d1), g=g1)
+        nu_l = float(lemma1_nu(tree_l2sq(g1), jnp.float32(d1), tau, c))
+        sol = solve_constrained_single(jnp.zeros(32), 1.0, cons, tau, c)
+        assert abs(nu_l - float(sol.nu[0])) < 1e-2 * (1 + nu_l), (d1, nu_l, sol.nu)
+
+
+def test_surrogate_recursion_matches_closed_form():
+    """F̄^t as stored (d, g) must equal the explicit weighted average of the
+    per-round quadratic surrogates (eq. (3) unrolled)."""
+    key = jax.random.PRNGKey(0)
+    params = jax.random.normal(key, (5,))
+    tau = 0.2
+    s = init_surrogate(params)
+    omegas, grads, vals, rhos = [], [], [], []
+    w = params
+    for t in range(1, 6):
+        kt = jax.random.fold_in(key, t)
+        g = jax.random.normal(kt, (5,))
+        v = float(jax.random.normal(jax.random.fold_in(kt, 1), ()))
+        rho = 1.0 if t == 1 else 0.9 / t**0.1
+        s = update_surrogate(s, rho, w, g, v, tau)
+        omegas.append(w); grads.append(g); vals.append(v); rhos.append(rho)
+        w = w - 0.1 * jax.random.normal(jax.random.fold_in(kt, 2), (5,))
+
+    probe = jax.random.normal(jax.random.fold_in(key, 99), (5,))
+    # explicit: sum_t c_t * fbar_t(probe), c_t = rho_t * prod_{r>t} (1-rho_r)
+    expect = 0.0
+    for t in range(5):
+        coef = rhos[t] * np.prod([1 - r for r in rhos[t + 1:]])
+        fbar = vals[t] + float(grads[t] @ (probe - omegas[t])) \
+            + tau * float((probe - omegas[t]) @ (probe - omegas[t]))
+        expect += coef * fbar
+    got = float(surrogate_value(s, probe, tau))
+    np.testing.assert_allclose(got, expect, rtol=1e-4)

@@ -1,0 +1,143 @@
+"""End-to-end behaviour of the paper's system (Algorithms 1-4 + baselines) on
+a synthetic classification task of the paper's shape (scaled down for CI).
+
+Validated claims (relative orderings, §VI):
+  - Alg 1 / Alg 3 decrease the training cost and beat FedSGD per round
+  - Alg 2 / Alg 4 drive the slack to ~0 and satisfy F(ω) <= U (+tolerance)
+    while minimizing ‖ω‖²  (Theorems 2/4 behaviour)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import algorithms, baselines, fed
+from repro.core.baselines import SGDConfig
+from repro.data.synthetic import classification_dataset
+from repro.models import mlp
+
+P, J, L, N, I = 32, 16, 5, 3000, 6
+ROUNDS = 150
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    (z, y, lab), (zt, yt, labt) = classification_dataset(
+        key, n=N, num_features=P, num_classes=L, test_n=500)
+    params0 = mlp.init(jax.random.PRNGKey(1), P, J, L)
+    data = fed.partition_samples(z, y, I)
+    fdata = fed.partition_features(z, y, 4)
+    return dict(z=z, y=y, zt=zt, labt=labt, params0=params0, data=data,
+                fdata=fdata)
+
+
+def psl(p, z, y):
+    return mlp.per_sample_loss(p, z, y)
+
+
+def _eval(problem):
+    def eval_fn(params, state):
+        return {"loss": float(mlp.mean_loss(params, problem["z"][:1000],
+                                            problem["y"][:1000]))}
+    return eval_fn
+
+
+def test_algorithm1_converges_and_beats_fedsgd(problem):
+    fl = FLConfig(batch_size=50, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
+    r1 = algorithms.algorithm1(psl, problem["params0"], problem["data"], fl,
+                               ROUNDS, jax.random.PRNGKey(2),
+                               eval_fn=_eval(problem), eval_every=ROUNDS // 3)
+    sgd = baselines.sample_sgd(psl, problem["params0"], problem["data"],
+                               SGDConfig(lr_a=0.3, lr_alpha=0.3, local_steps=1,
+                                         local_batch=50),
+                               ROUNDS, jax.random.PRNGKey(2),
+                               eval_fn=_eval(problem), eval_every=ROUNDS // 3)
+    l1 = np.asarray(r1.history["loss"])
+    ls = np.asarray(sgd.history["loss"])
+    assert l1[-1] < l1[0], "Alg 1 did not decrease the training cost"
+    assert l1[-1] < ls[-1], f"SSCA {l1[-1]} not faster than FedSGD {ls[-1]}"
+    assert np.isfinite(l1).all()
+
+
+def test_algorithm2_constrained_feasibility(problem):
+    u = 1.3
+    fl = FLConfig(batch_size=50, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, constrained=True, cost_limit=u,
+                  penalty_c=1e4)
+    r2 = algorithms.algorithm2(psl, problem["params0"], problem["data"], fl,
+                               400, jax.random.PRNGKey(3),
+                               eval_fn=lambda p, s: {
+                                   "loss": float(mlp.mean_loss(p, problem["z"][:1000],
+                                                               problem["y"][:1000])),
+                                   "l2": float(mlp.l2_sq(p)),
+                                   "slack": float(s.slack)},
+                               eval_every=100)
+    loss = np.asarray(r2.history["loss"])
+    slack = np.asarray(r2.history["slack"])
+    assert slack[-1] < 1e-3, f"slack did not vanish: {slack}"
+    assert loss[-1] <= u * 1.15, f"constraint violated: F={loss[-1]} > U={u}"
+    # the minimum-norm solution should sit near the constraint boundary
+    assert loss[-1] >= u * 0.5
+
+
+def test_algorithm3_feature_based(problem):
+    fdata = problem["fdata"]
+    pi = fdata.feature_blocks.shape[-1]
+    w1 = problem["params0"]["w1"]
+    pad = 4 * pi - P
+    w1p = jnp.pad(w1, ((0, 0), (0, pad)))
+    fparams0 = {"w0": problem["params0"]["w0"],
+                "blocks": w1p.reshape(J, 4, pi).transpose(1, 0, 2)}
+    fl = FLConfig(batch_size=64, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5, mode="feature")
+
+    def eval_fn(p, s):
+        hsum = sum(mlp.client_h(p["blocks"][i], fdata.feature_blocks[i][:800])
+                   for i in range(4))
+        return {"loss": float(jnp.mean(mlp.per_sample_loss_from_h(
+            p["w0"], hsum, problem["y"][:800])))}
+
+    r3 = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                               fparams0, fdata, fl, ROUNDS,
+                               jax.random.PRNGKey(4), eval_fn=eval_fn,
+                               eval_every=ROUNDS // 3)
+    l3 = np.asarray(r3.history["loss"])
+    assert l3[-1] < l3[0] and np.isfinite(l3).all()
+
+
+def test_algorithm4_constrained_feature_based(problem):
+    fdata = problem["fdata"]
+    pi = fdata.feature_blocks.shape[-1]
+    w1p = jnp.pad(problem["params0"]["w1"], ((0, 0), (0, 4 * pi - P)))
+    fparams0 = {"w0": problem["params0"]["w0"],
+                "blocks": w1p.reshape(J, 4, pi).transpose(1, 0, 2)}
+    u = 1.4
+    fl = FLConfig(batch_size=64, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, constrained=True, cost_limit=u,
+                  penalty_c=1e4, mode="feature")
+    r4 = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                               fparams0, fdata, fl, 400, jax.random.PRNGKey(5),
+                               eval_fn=lambda p, s: {"slack": float(s.slack)},
+                               eval_every=100)
+    assert float(np.asarray(r4.history["slack"])[-1]) < 1e-3
+
+
+def test_general_constrained_algorithm2(problem):
+    """Full Algorithm 2 (sampled objective AND constraint, bisection solver)."""
+    fl = FLConfig(batch_size=50, tau=0.2, cost_limit=1.5, penalty_c=1e4,
+                  alpha_gamma=0.6)
+    r = algorithms.algorithm2_general(psl, psl, problem["params0"],
+                                      problem["data"], fl, 150,
+                                      jax.random.PRNGKey(6),
+                                      eval_fn=lambda p, s: {
+                                          "loss": float(mlp.mean_loss(
+                                              p, problem["z"][:500],
+                                              problem["y"][:500])),
+                                          "slack": float(s.slack)},
+                                      eval_every=50)
+    loss = np.asarray(r.history["loss"])
+    assert np.isfinite(loss).all()
+    assert loss[-1] < loss[0] * 1.05
