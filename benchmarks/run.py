@@ -14,8 +14,9 @@ def main() -> None:
                     help="substring filter on benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import extensions_bench, figures, kernels_bench
+    from benchmarks import extensions_bench, figures, kernels_bench, rounds_bench
     benches = [
+        ("rounds_scan_vs_loop", rounds_bench.rounds_scan_vs_loop),
         ("fig1_unconstrained_sample_based", figures.fig1_unconstrained_sample_based),
         ("fig1ef_constrained_sample_based", figures.fig1ef_constrained_sample_based),
         ("fig2_feature_based", figures.fig2_feature_based),

@@ -1,0 +1,74 @@
+"""Heterogeneous federated learning: non-IID clients + partial participation.
+
+    PYTHONPATH=src python examples/heterogeneous_fl.py [--rounds 200] [--n 20000]
+
+The paper's convergence theory (Theorems 1-4) is stated for heterogeneous
+client datasets (N_i varies) and holds under unbiased gradient estimates —
+which per-round client sampling preserves (fed.aggregation_weights). This
+example sweeps the two practical-FL axes the companion literature emphasizes:
+
+  * statistical heterogeneity: Dirichlet(α) label-skew partitions with
+    α ∈ {0.1 (near single-class clients), 100 (≈IID)}, ragged N_i;
+  * systems heterogeneity: S = 3 of I = 10 clients participating per round,
+    aggregation reweighted by I/S to stay unbiased.
+
+All four scenario cells run Algorithm 1 through the scan-compiled round
+driver (one XLA dispatch per eval chunk) and print final cost/accuracy.
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import FLConfig
+from repro.core import algorithms, fed
+from repro.data.synthetic import classification_dataset
+from repro.models import mlp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--participation", type=int, default=3)
+    args = ap.parse_args()
+    if args.rounds < 1 or args.participation < 1:
+        ap.error("--rounds and --participation must be >= 1")
+
+    key = jax.random.PRNGKey(0)
+    print(f"building synthetic dataset (N={args.n}, P=784, L=10) ...")
+    (z, y, _), (zt, _, labt) = classification_dataset(
+        key, n=args.n, num_features=784, num_classes=10, test_n=2_000,
+        noise=4.0)
+    params0 = mlp.init(jax.random.PRNGKey(1), 784, 64, 10)
+    fl = FLConfig(num_clients=args.clients, batch_size=100, a1=0.3, a2=0.3,
+                  alpha_rho=0.1, alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
+
+    def eval_fn(params, state):
+        return {"cost": float(mlp.mean_loss(params, z[:4000], y[:4000])),
+                "acc": float(mlp.accuracy(params, zt, labt))}
+
+    scenarios = []
+    for alpha, tag in ((100.0, "near-IID"), (0.1, "pathological non-IID")):
+        data = fed.partition_dirichlet(z, y, args.clients,
+                                       jax.random.fold_in(key, 3), alpha=alpha)
+        counts = [int(c) for c in data.counts]
+        print(f"\nDirichlet(alpha={alpha}) [{tag}]  N_i = {counts}")
+        for part in (None, args.participation):
+            label = (f"alpha={alpha:<5g} S={part or args.clients}/"
+                     f"{args.clients}")
+            r = algorithms.algorithm1(
+                mlp.per_sample_loss, params0, data, fl, args.rounds,
+                jax.random.PRNGKey(2), eval_fn=eval_fn,
+                eval_every=args.rounds, participation=part)
+            cost, acc = float(r.history["cost"][-1]), float(r.history["acc"][-1])
+            scenarios.append((label, cost, acc))
+            print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}")
+
+    print("\nscenario summary (Algorithm 1, scan driver):")
+    for label, cost, acc in scenarios:
+        print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

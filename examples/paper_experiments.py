@@ -26,11 +26,15 @@ from repro.models import mlp
 
 def write_history(path, hist):
     os.makedirs(os.path.dirname(path), exist_ok=True)
-    keys = sorted(hist)
+    # eval-series columns only: the driver also returns full per-round
+    # "round_*" series of length `rounds`, which would misalign these rows
+    n = len(hist["round"])
+    keys = sorted(k for k in hist if len(hist[k]) == n and not
+                  k.startswith("round_"))
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(keys)
-        for i in range(len(hist["round"])):
+        for i in range(n):
             w.writerow([float(hist[k][i]) for k in keys])
     print("wrote", path)
 

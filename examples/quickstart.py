@@ -1,11 +1,13 @@
 """Quickstart: federated training with mini-batch SSCA (paper Algorithm 1).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds 300] [--n 20000]
 
 Ten clients collaboratively train the paper's two-layer swish network on a
 synthetic MNIST-shaped classification task; compares against FedSGD at the
 same per-round computation and prints the per-round training cost.
 """
+import argparse
+
 import jax
 
 from repro.configs.base import FLConfig
@@ -16,10 +18,17 @@ from repro.models import mlp
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--n", type=int, default=20_000)
+    args = ap.parse_args()
+    if args.rounds < 1 or args.n < 100:
+        ap.error("--rounds must be >= 1 and --n >= 100")
+    rounds = args.rounds
     key = jax.random.PRNGKey(0)
-    print("building synthetic dataset (N=20000, P=784, L=10) ...")
+    print(f"building synthetic dataset (N={args.n}, P=784, L=10) ...")
     (z, y, _), (zt, _, labt) = classification_dataset(
-        key, n=20_000, num_features=784, num_classes=10, test_n=2_000,
+        key, n=args.n, num_features=784, num_classes=10, test_n=2_000,
         noise=4.0)
     params0 = mlp.init(jax.random.PRNGKey(1), 784, 64, 10)
     data = fed.partition_samples(z, y, num_clients=10)
@@ -30,11 +39,11 @@ def main():
 
     fl = FLConfig(num_clients=10, batch_size=100, a1=0.3, a2=0.3,
                   alpha_rho=0.1, alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
-    print("running Algorithm 1 (mini-batch SSCA) for 300 rounds ...")
+    print(f"running Algorithm 1 (mini-batch SSCA) for {rounds} rounds ...")
     r = algorithms.algorithm1(
         lambda p, zz, yy: mlp.per_sample_loss(p, zz, yy),
-        params0, data, fl, rounds=300, key=jax.random.PRNGKey(2),
-        eval_fn=eval_fn, eval_every=50)
+        params0, data, fl, rounds=rounds, key=jax.random.PRNGKey(2),
+        eval_fn=eval_fn, eval_every=max(1, rounds // 6))
     for i, rd in enumerate(r.history["round"]):
         print(f"  round {int(rd):4d}  cost={float(r.history['cost'][i]):.4f}"
               f"  acc={float(r.history['acc'][i]):.4f}")
@@ -43,7 +52,8 @@ def main():
     b = baselines.sample_sgd(
         lambda p, zz, yy: mlp.per_sample_loss(p, zz, yy),
         params0, data, SGDConfig(lr_a=0.3, lr_alpha=0.3, local_batch=100),
-        rounds=300, key=jax.random.PRNGKey(2), eval_fn=eval_fn, eval_every=300)
+        rounds=rounds, key=jax.random.PRNGKey(2), eval_fn=eval_fn,
+        eval_every=rounds)
     print(f"  FedSGD final cost={float(b.history['cost'][-1]):.4f}")
     print(f"  SSCA   final cost={float(r.history['cost'][-1]):.4f}  "
           "<- faster per communication round (paper Fig. 1)")

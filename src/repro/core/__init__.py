@@ -5,8 +5,9 @@
   solvers    — closed-form/lax solvers for Problems 2/5/7/10 (incl. Lemma 1)
   optimizer  — SSCA as a composable (state, grad) -> state optimizer
   fed        — client containers, per-round uploads, aggregation, comm loads
+  rounds     — scan-compiled multi-round driver (one dispatch per K rounds)
   algorithms — faithful Algorithm 1-4 drivers
   baselines  — FedSGD / FedAvg / PR-SGD / SGD-m comparison algorithms
 """
-from repro.core import (algorithms, baselines, fed, optimizer, schedules,  # noqa: F401
-                        solvers, surrogate)
+from repro.core import (algorithms, baselines, fed, optimizer, rounds,  # noqa: F401
+                        schedules, solvers, surrogate)

@@ -1,46 +1,47 @@
 """Drivers for the paper's Algorithms 1-4 (faithful protocol simulation).
 
-Each driver runs T-1 communication rounds with per-round client mini-batch
-selection (PRNG-folded), the exact uploads of the paper, and the closed-form
-server updates. Rounds are lax.scan-ed in chunks with periodic evaluation.
+Each driver runs the paper's communication rounds with per-round client
+mini-batch selection (PRNG-folded), the exact uploads of the paper, and the
+closed-form server updates. The whole round chain is scan-compiled by
+``core/rounds.py`` — a K-round run (or eval chunk) is a single XLA dispatch
+with ρ^t/γ^t threaded through the scan (DESIGN.md §6).
+
+The sample-based drivers (Algorithms 1/2) take ``participation=S`` to sample
+S of I clients uniformly per round, with the unbiased I/S-reweighted
+N_i/(B_i·N) aggregation of `fed.aggregation_weights`; they accept ragged
+(e.g. Dirichlet-partitioned) client datasets transparently.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import fed, optimizer
+from repro.core import rounds as rounds_lib
 from repro.core.fed import FeatureFedData, SampleFedData
+from repro.core.rounds import RunResult  # re-exported (public API since seed)
 
 
-class RunResult(NamedTuple):
-    params: object
-    history: dict             # metric name -> (T_evals,) arrays
-    final_state: object
+def _run(step_fn, state, key, num_rounds: int, eval_fn: Optional[Callable],
+         eval_every: int, extract_params, fl=None, driver: str = "scan"):
+    """Back-compat driver shim shared with baselines/local_updates: step_fn
+    has the rounds.py signature step(state, RoundInputs-slice) -> (state,
+    metrics). fl is only needed for the schedule inputs; steps that ignore
+    rho/gamma (SGD baselines) may pass fl=None."""
+    fl = fl if fl is not None else _NULL_SCHED
+    return rounds_lib.run_rounds(step_fn, state, fl, key, num_rounds,
+                             eval_fn=eval_fn, eval_every=eval_every,
+                             extract_params=extract_params, driver=driver)
 
 
-def _run(step_fn, state, key, rounds: int, eval_fn: Optional[Callable],
-         eval_every: int, extract_params):
-    chunk = max(1, eval_every)
-    n_chunks = max(1, rounds // chunk)
+class _NullSched:
+    a1 = a2 = 1.0
+    alpha_rho = alpha_gamma = 1.0
 
-    @jax.jit
-    def run_chunk(state, keys):
-        return jax.lax.scan(lambda s, k: (step_fn(s, k), None), state, keys)[0]
 
-    hist = {"round": []}
-    for c in range(n_chunks):
-        key, sub = jax.random.split(key)
-        state = run_chunk(state, jax.random.split(sub, chunk))
-        if eval_fn is not None:
-            metrics = eval_fn(extract_params(state), state)
-            for k, v in metrics.items():
-                hist.setdefault(k, []).append(v)
-            hist["round"].append((c + 1) * chunk)
-    history = {k: jnp.asarray(v) for k, v in hist.items()}
-    return RunResult(extract_params(state), history, state)
+_NULL_SCHED = _NullSched()
 
 
 # ---------------------------------------------------------------------------
@@ -48,15 +49,31 @@ def _run(step_fn, state, key, rounds: int, eval_fn: Optional[Callable],
 # ---------------------------------------------------------------------------
 
 
-def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
-               key, eval_fn=None, eval_every: int = 10) -> RunResult:
-    def step(state, k):
-        grad_est, _, _ = fed.sample_round(per_sample_loss, state.params, data,
-                                          k, fl.batch_size)
-        return optimizer.ssca_step(state, grad_est, fl)
+def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
+                         participation: Optional[int] = None):
+    """One full Algorithm-1 round as a pure (state, RoundInputs) step —
+    batch selection, uploads, aggregation, surrogate recursion, update —
+    suitable for lax.scan (rounds.scan_rounds) or per-round dispatch."""
 
+    def step(state, inp):
+        grad_est, val_est, _ = fed.sample_round(
+            per_sample_loss, state.params, data, inp.key, fl.batch_size,
+            participation=participation)
+        new = optimizer.ssca_step(state, grad_est, fl,
+                                  rho_t=inp.rho, gamma_t=inp.gamma)
+        return new, {"loss_est": val_est}
+
+    return step
+
+
+def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
+               key, eval_fn=None, eval_every: int = 10,
+               participation: Optional[int] = None,
+               driver: str = "scan") -> RunResult:
+    step = make_algorithm1_step(per_sample_loss, data, fl, participation)
     state = optimizer.ssca_init(params0)
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -64,31 +81,53 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
 # ---------------------------------------------------------------------------
 
 
-def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
-               key, eval_fn=None, eval_every: int = 10) -> RunResult:
-    def step(state, k):
-        grad_est, val_est, _ = fed.sample_round(per_sample_loss, state.params,
-                                                data, k, fl.batch_size,
-                                                with_value=True)
-        return optimizer.ssca_constrained_step(state, grad_est, val_est, fl)
+def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
+                         participation: Optional[int] = None):
+    def step(state, inp):
+        grad_est, val_est, _ = fed.sample_round(
+            per_sample_loss, state.params, data, inp.key, fl.batch_size,
+            with_value=True, participation=participation)
+        new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
+                                              rho_t=inp.rho, gamma_t=inp.gamma)
+        return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
 
+    return step
+
+
+def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
+               key, eval_fn=None, eval_every: int = 10,
+               participation: Optional[int] = None,
+               driver: str = "scan") -> RunResult:
+    step = make_algorithm2_step(per_sample_loss, data, fl, participation)
     state = optimizer.ssca_constrained_init(params0)
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl, driver=driver)
 
 
 def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
-                       rounds: int, key, eval_fn=None,
-                       eval_every: int = 10) -> RunResult:
+                       rounds: int, key, eval_fn=None, eval_every: int = 10,
+                       participation: Optional[int] = None,
+                       driver: str = "scan") -> RunResult:
     """Full Algorithm 2: sampled nonconvex objective AND constraint."""
-    def step(state, k):
-        k1, k2 = jax.random.split(k)
-        og, _, _ = fed.sample_round(obj_loss, state.params, data, k1, fl.batch_size)
+    def step(state, inp):
+        k1, k2 = jax.random.split(inp.key)
+        # ONE participant set per round: both the objective and the constraint
+        # statistics are uploaded by the same S clients (faithful protocol).
+        pk = jax.random.fold_in(inp.key, 0x5ca)
+        og, _, _ = fed.sample_round(obj_loss, state.params, data, k1,
+                                    fl.batch_size, participation=participation,
+                                    participation_key=pk)
         cg, cv, _ = fed.sample_round(cons_loss, state.params, data, k2,
-                                     fl.batch_size, with_value=True)
-        return optimizer.ssca_general_constrained_step(state, og, cg, cv, fl)
+                                     fl.batch_size, with_value=True,
+                                     participation=participation,
+                                     participation_key=pk)
+        new = optimizer.ssca_general_constrained_step(
+            state, og, cg, cv, fl, rho_t=inp.rho, gamma_t=inp.gamma)
+        return new, {"cons_est": cv, "nu": new.nu, "slack": new.slack}
 
     state = optimizer.ssca_general_constrained_init(params0)
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -97,14 +136,19 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
 
 
 def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
-               rounds: int, key, eval_fn=None, eval_every: int = 10) -> RunResult:
-    def step(state, k):
-        grad_est, _, _ = fed.feature_round(state.params, data, k, fl.batch_size,
-                                           head_loss_from_h, client_h)
-        return optimizer.ssca_step(state, grad_est, fl)
+               rounds: int, key, eval_fn=None, eval_every: int = 10,
+               driver: str = "scan") -> RunResult:
+    def step(state, inp):
+        grad_est, val_est, _ = fed.feature_round(
+            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
+            client_h)
+        new = optimizer.ssca_step(state, grad_est, fl,
+                                  rho_t=inp.rho, gamma_t=inp.gamma)
+        return new, {"loss_est": val_est}
 
     state = optimizer.ssca_init(params0)
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -113,12 +157,16 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
 
 
 def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
-               rounds: int, key, eval_fn=None, eval_every: int = 10) -> RunResult:
-    def step(state, k):
-        grad_est, val_est, _ = fed.feature_round(state.params, data, k,
-                                                 fl.batch_size,
-                                                 head_loss_from_h, client_h)
-        return optimizer.ssca_constrained_step(state, grad_est, val_est, fl)
+               rounds: int, key, eval_fn=None, eval_every: int = 10,
+               driver: str = "scan") -> RunResult:
+    def step(state, inp):
+        grad_est, val_est, _ = fed.feature_round(
+            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
+            client_h)
+        new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
+                                              rho_t=inp.rho, gamma_t=inp.gamma)
+        return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
 
     state = optimizer.ssca_constrained_init(params0)
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl, driver=driver)

@@ -77,14 +77,14 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
         v0 = tree_zeros_like(params_v0)
         return jax.lax.fori_loop(0, cfg.local_steps, one, (params_v0, v0))
 
-    def step(state, k):
+    def step(state, inp):
         lr = cfg.lr_a if momentum else _lr(cfg, state.t)
-        keys = jax.random.split(k, data.num_clients)
+        keys = jax.random.split(inp.key, data.num_clients)
         locals_, _ = jax.vmap(
             lambda f_, l_, c_, k_: local(state.params, f_, l_, c_, k_, lr)
         )(data.features, data.labels, data.counts, keys)
         params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
-        return SGDState(params=params, t=state.t + 1)
+        return SGDState(params=params, t=state.t + 1), {}
 
     state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
     return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
@@ -94,12 +94,13 @@ def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
                 cfg: SGDConfig, rounds: int, key, eval_fn=None,
                 eval_every: int = 10, momentum: bool = False) -> RunResult:
     """One global (momentum-)SGD step per round via the Alg-3 info collection."""
-    def step(state, k):
+    def step(state, inp):
         if momentum:
             params, v, t = state.params, state.v, state.t
         else:
             params, t = state.params, state.t
-        grad_est, _, _ = fed.feature_round(params, data, k, cfg.local_batch,
+        grad_est, _, _ = fed.feature_round(params, data, inp.key,
+                                           cfg.local_batch,
                                            head_loss_from_h, client_h)
         grad_est = jax.tree.map(
             lambda g, p: g + 2 * cfg.l2_lambda * p, grad_est, params)
@@ -107,9 +108,9 @@ def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
         if momentum:
             v = jax.tree.map(lambda vv, gg: cfg.momentum * vv + gg, v, grad_est)
             params = jax.tree.map(lambda p, u: p - lr * u, params, v)
-            return SGDmState(params=params, v=v, t=t + 1)
+            return SGDmState(params=params, v=v, t=t + 1), {}
         params = jax.tree.map(lambda p, g: p - lr * g, params, grad_est)
-        return SGDState(params=params, t=t + 1)
+        return SGDState(params=params, t=t + 1), {}
 
     if momentum:
         state = SGDmState(params=params0, v=tree_zeros_like(params0),

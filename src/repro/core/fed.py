@@ -58,6 +58,64 @@ def partition_samples(features, labels, num_clients, key=None) -> SampleFedData:
     return SampleFedData(features, labels, counts)
 
 
+def partition_ragged(feature_shards, label_shards) -> SampleFedData:
+    """Build a padded SampleFedData from explicit per-client shards (lists of
+    (N_i, P) / (N_i, L) arrays with heterogeneous N_i). Padding rows are zero
+    and never selected: `sample_batches` draws indices in [0, N_i)."""
+    import numpy as np
+
+    counts = np.asarray([len(f) for f in feature_shards], np.int32)
+    if (counts <= 0).any():
+        raise ValueError(f"every client needs >= 1 sample, got counts={counts}")
+    n_max = int(counts.max())
+    p = np.asarray(feature_shards[0]).shape[-1]
+    l = np.asarray(label_shards[0]).shape[-1]
+    feats = np.zeros((len(counts), n_max, p), np.asarray(feature_shards[0]).dtype)
+    labs = np.zeros((len(counts), n_max, l), np.asarray(label_shards[0]).dtype)
+    for i, (f, y) in enumerate(zip(feature_shards, label_shards)):
+        feats[i, : counts[i]] = np.asarray(f)
+        labs[i, : counts[i]] = np.asarray(y)
+    return SampleFedData(jnp.asarray(feats), jnp.asarray(labs),
+                         jnp.asarray(counts))
+
+
+def partition_dirichlet(features, labels, num_clients, key,
+                        alpha: float = 0.5) -> SampleFedData:
+    """Non-IID label-skew partition: for each class c, client shares of the
+    class-c samples are drawn ~ Dirichlet(alpha·1_I), the standard statistical-
+    heterogeneity benchmark protocol. Every sample is assigned to exactly one
+    client; N_i become genuinely ragged. alpha → ∞ recovers IID; alpha → 0
+    gives near single-class clients. A client that ends up empty is given one
+    sample from the largest client (N_i >= 1 is a protocol invariant)."""
+    import numpy as np
+
+    lab_int = np.asarray(jnp.argmax(labels, axis=-1))
+    features, labels = np.asarray(features), np.asarray(labels)
+    num_classes = labels.shape[-1]
+    shards = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        idx = np.flatnonzero(lab_int == c)
+        if idx.size == 0:
+            continue
+        kc = jax.random.fold_in(key, c)
+        idx = idx[np.asarray(jax.random.permutation(kc, idx.size))]
+        props = np.asarray(jax.random.dirichlet(
+            jax.random.fold_in(kc, 1), alpha * jnp.ones((num_clients,))))
+        # largest-remainder rounding so the splits sum exactly to idx.size
+        raw = props * idx.size
+        take = np.floor(raw).astype(int)
+        rem = idx.size - take.sum()
+        take[np.argsort(raw - np.floor(raw))[::-1][:rem]] += 1
+        for i, chunk in enumerate(np.split(idx, np.cumsum(take)[:-1])):
+            shards[i].extend(chunk.tolist())
+    for i in range(num_clients):            # enforce N_i >= 1
+        if not shards[i]:
+            donor = max(range(num_clients), key=lambda j: len(shards[j]))
+            shards[i].append(shards[donor].pop())
+    return partition_ragged([features[s] for s in shards],
+                            [labels[s] for s in shards])
+
+
 def partition_features(features, labels, num_clients) -> FeatureFedData:
     """Split the P feature columns into I equal blocks (pad with zero cols)."""
     n, p = features.shape
@@ -84,33 +142,84 @@ def sample_batches(data: SampleFedData, key, batch_size: int):
     return jax.vmap(pick)(keys, data.counts)        # (I, B)
 
 
+def batch_mask(counts, batch_size: int):
+    """(I, B) validity mask for ragged clients: client i fills min(B, N_i)
+    batch slots; a client with N_i < B contributes a smaller sum (its
+    aggregation weight uses B_i = min(B, N_i), see `aggregation_weights`).
+    For B <= min_i N_i this is all-ones and the dense path is recovered
+    bit-for-bit."""
+    b_i = jnp.minimum(counts, batch_size)                       # (I,)
+    return (jnp.arange(batch_size)[None, :] < b_i[:, None]).astype(jnp.float32)
+
+
+def participation_mask(key, num_clients: int, participation: int):
+    """0/1 mask selecting S = `participation` of I clients uniformly without
+    replacement (each client included w.p. S/I)."""
+    sel = jax.random.permutation(key, num_clients)[:participation]
+    return jnp.zeros((num_clients,), jnp.float32).at[sel].set(1.0)
+
+
+def aggregation_weights(counts, batch_size: int, part_mask=None):
+    """Server weights w_i applied to the q-uploads.
+
+    Dense full participation: w_i = N_i/(B_i·N) with B_i = min(B, N_i)
+    (the paper's N_i/(BN), generalized to ragged clients). Under partial
+    participation (mask m selecting S of I clients) the weights become
+    m_i·(I/S)·N_i/(B_i·N) — a Horvitz-Thompson estimator, unbiased because
+    E[m_i] = S/I exactly cancels the I/S inflation."""
+    counts = counts.astype(jnp.float32)
+    b_i = jnp.minimum(counts, batch_size)
+    w = counts / (b_i * jnp.sum(counts))
+    if part_mask is not None:
+        scale = counts.shape[0] / jnp.sum(part_mask)
+        w = w * part_mask * scale
+    return w
+
+
 def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
-                 batch_size: int, with_value: bool = False):
+                 batch_size: int, with_value: bool = False,
+                 participation: int | None = None, participation_key=None):
     """Computes client uploads q_i = Σ_{n∈batch} ∇f(ω;x_n) (and Σ f if asked)
-    then the server aggregate ĝ = Σ_i N_i/(BN) q_i  (and F̂ likewise).
+    then the server aggregate ĝ = Σ_i N_i/(B_i·N) q_i  (and F̂ likewise).
+
+    Ragged clients (N_i < B) contribute masked batches of B_i = min(B, N_i)
+    samples. With `participation` = S < I, only S uniformly-drawn clients are
+    aggregated this round, reweighted by I/S so the estimate stays unbiased
+    (this simulation still *computes* every client's q with static shapes and
+    zero-masks the rest at the server; a deployment would skip the work).
 
     Returns (grad_est, value_est, uploads) — `uploads` is everything that
     crossed the client boundary (privacy-surface assertion hook).
     """
+    if participation is not None and participation < 1:
+        raise ValueError(f"participation must be >= 1, got {participation}")
     idx = sample_batches(data, key, batch_size)      # (I, B)
-    n_total = data.total.astype(jnp.float32)
+    bmask = batch_mask(data.counts, batch_size)      # (I, B)
 
-    def client(feat_i, lab_i, idx_i):
+    def client(feat_i, lab_i, idx_i, mask_i):
         zb = jnp.take(feat_i, idx_i, axis=0)
         yb = jnp.take(lab_i, idx_i, axis=0)
 
         def batch_sum_loss(p):
-            return jnp.sum(per_sample_loss(p, zb, yb))
+            return jnp.sum(per_sample_loss(p, zb, yb) * mask_i)
 
         val, q = jax.value_and_grad(batch_sum_loss)(params)
         return q, val
 
-    q, val = jax.vmap(client)(data.features, data.labels, idx)   # pytree (I,...), (I,)
-    w = data.counts.astype(jnp.float32) / (batch_size * n_total)  # N_i/(BN)
+    q, val = jax.vmap(client)(data.features, data.labels, idx, bmask)
+    pmask = None
+    # S >= I degrades to full participation (the I/S reweighting is exactly 1)
+    if participation is not None and participation < data.num_clients:
+        if participation_key is None:
+            participation_key = jax.random.fold_in(key, 0x5ca)
+        pmask = participation_mask(participation_key, data.num_clients,
+                                   participation)
+    w = aggregation_weights(data.counts, batch_size, pmask)
     grad_est = jax.tree.map(
         lambda u: jnp.tensordot(w, u.astype(jnp.float32), axes=1), q)
     value_est = jnp.dot(w, val)
-    uploads = {"q_grad_sums": q, "q_value_sums": val if with_value else None}
+    uploads = {"q_grad_sums": q, "q_value_sums": val if with_value else None,
+               "participants": pmask}
     return grad_est, value_est, uploads
 
 

@@ -20,7 +20,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import schedules
 from repro.core.algorithms import RunResult, _run
 from repro.core.fed import SampleFedData
 from repro.core.surrogate import tree_zeros_like
@@ -56,11 +55,9 @@ def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
 
         return jax.lax.fori_loop(0, local_steps, one, (params, v))
 
-    def step(state, k):
-        rho_t = jnp.where(state.t == 1, 1.0,
-                          schedules.rho(state.t, fl.a1, fl.alpha_rho))
-        gamma_t = schedules.gamma(state.t, fl.a2, fl.alpha_gamma)
-        keys = jax.random.split(k, data.num_clients)
+    def step(state, inp):
+        rho_t, gamma_t = inp.rho, inp.gamma
+        keys = jax.random.split(inp.key, data.num_clients)
         locals_, vs = jax.vmap(
             lambda f_, l_, c_, k_: local(state.params, state.v, f_, l_, c_,
                                          k_, rho_t, gamma_t)
@@ -68,8 +65,9 @@ def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
         # server: weighted model/momentum averaging (uploads: d floats each)
         params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
         v = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), vs)
-        return LocalSSCAState(params=params, v=v, t=state.t + 1)
+        return LocalSSCAState(params=params, v=v, t=state.t + 1), {}
 
     state = LocalSSCAState(params=params0, v=tree_zeros_like(params0),
                            t=jnp.ones((), jnp.int32))
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    return _run(step, state, key, rounds, eval_fn, eval_every,
+                lambda s: s.params, fl=fl)

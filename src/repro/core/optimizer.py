@@ -40,11 +40,17 @@ class SSCAConstrainedState(NamedTuple):
     slack: jnp.ndarray        # last slack (Theorem 2: -> 0)
 
 
-def _sched(fl, t):
+def _sched(fl, t, rho_t=None, gamma_t=None):
     # the paper's examples choose ρ^(1) = 1 (§III-A, before eq. (11)): the
     # t=1 surrogate is then a pure batch estimate, independent of the zero init.
-    rho_t = jnp.where(t == 1, 1.0, schedules.rho(t, fl.a1, fl.alpha_rho))
-    return rho_t, schedules.gamma(t, fl.a2, fl.alpha_gamma)
+    # Callers may pass precomputed per-round (rho_t, gamma_t) — the scan-round
+    # driver (core/rounds.py) threads them as scan inputs so K compiled rounds
+    # never recompute the power-law schedule from the carried t.
+    if rho_t is None:
+        rho_t = jnp.where(t == 1, 1.0, schedules.rho(t, fl.a1, fl.alpha_rho))
+    if gamma_t is None:
+        gamma_t = schedules.gamma(t, fl.a2, fl.alpha_gamma)
+    return rho_t, gamma_t
 
 
 # ---------------------------------------------------------------------------
@@ -57,10 +63,10 @@ def ssca_init(params) -> SSCAState:
                      t=jnp.ones((), jnp.int32))
 
 
-def ssca_step(state: SSCAState, grad, fl) -> SSCAState:
+def ssca_step(state: SSCAState, grad, fl, rho_t=None, gamma_t=None) -> SSCAState:
     """grad: aggregated mini-batch gradient estimate of the *data* loss F
     (the λ‖ω‖² regularizer is injected here, not in grad)."""
-    rho_t, gamma_t = _sched(fl, state.t)
+    rho_t, gamma_t = _sched(fl, state.t, rho_t, gamma_t)
     lam, tau = fl.l2_lambda, fl.tau
     # eq. (9) with 2λω folded (eq. 35): inj = ∇F̂ + 2λω - 2τω
     g = jax.tree.map(
@@ -93,13 +99,14 @@ def momentum_form_init(params) -> MomentumForm:
                         gamma_prev=jnp.zeros((), jnp.float32))
 
 
-def momentum_form_step(state: MomentumForm, grad, fl) -> MomentumForm:
+def momentum_form_step(state: MomentumForm, grad, fl, rho_t=None,
+                       gamma_t=None) -> MomentumForm:
     """v^t = (1-ρ^t)(1-γ^(t-1)) v^(t-1) + (ρ^t/2τ) ĝ^t;  ω ← ω - γ^t v^t.
 
     ĝ here is the gradient of the *full* objective incl. the regularizer
     (∇F̂ + 2λω); with ρ^(1)=1 the iterates equal ssca_step exactly.
     """
-    rho_t, gamma_t = _sched(fl, state.t)
+    rho_t, gamma_t = _sched(fl, state.t, rho_t, gamma_t)
     full_grad = jax.tree.map(
         lambda gr, w: gr.astype(jnp.float32) + 2 * fl.l2_lambda * w.astype(jnp.float32),
         grad, state.params)
@@ -125,10 +132,10 @@ def ssca_constrained_init(params) -> SSCAConstrainedState:
 
 
 def ssca_constrained_step(state: SSCAConstrainedState, loss_grad, loss_value,
-                          fl) -> SSCAConstrainedState:
+                          fl, rho_t=None, gamma_t=None) -> SSCAConstrainedState:
     """min ‖ω‖² s.t. F(ω) <= U  (eq. 40). Objective is deterministic and kept
     exact (τ0 = 1 quadratic); the loss constraint is approximated per (15)."""
-    rho_t, gamma_t = _sched(fl, state.t)
+    rho_t, gamma_t = _sched(fl, state.t, rho_t, gamma_t)
     cons = update_surrogate(state.cons, rho_t, state.params, loss_grad,
                             loss_value - fl.cost_limit, fl.tau)
     # Lemma 1 closed form (g0 = 0): ν* then ω̄ = -ν g1 / (2(1 + ν τ))
@@ -165,11 +172,11 @@ def ssca_general_constrained_init(params) -> SSCAGeneralConstrainedState:
 
 
 def ssca_general_constrained_step(state: SSCAGeneralConstrainedState, obj_grad,
-                                  cons_grad, cons_value,
-                                  fl) -> SSCAGeneralConstrainedState:
+                                  cons_grad, cons_value, fl, rho_t=None,
+                                  gamma_t=None) -> SSCAGeneralConstrainedState:
     """Full Algorithm 2/4 example: both the objective and the constraint are
     sampled nonconvex losses; Problem 5/10 solved by monotone bisection."""
-    rho_t, gamma_t = _sched(fl, state.t)
+    rho_t, gamma_t = _sched(fl, state.t, rho_t, gamma_t)
     tau = fl.tau
     obj_g = jax.tree.map(
         lambda b, gr, w: (1 - rho_t) * b

@@ -1,0 +1,180 @@
+"""Scan-compiled multi-round federated driver (see DESIGN.md §6).
+
+The seed runtime drove communication rounds from a Python loop: one XLA
+dispatch per round, schedule powers recomputed from the carried t, metrics
+only observable at chunk boundaries. This module folds the *entire* SSCA
+round chain — client mini-batch selection (paper step 4), q-statistic uploads,
+N_i/(B_i·N) aggregation, surrogate recursion (eq. 9), and the closed-form
+update (eq. 10) / constrained Lemma-1 step — into a single ``lax.scan`` over
+rounds, so a K-round epoch is ONE dispatch:
+
+    inputs = make_inputs(fl, t0, K, key)         # per-round (key, ρ^t, γ^t)
+    state, hist = scan_rounds(step_fn, state, inputs)
+
+Per-round ρ^t/γ^t are precomputed on the host (including the paper's ρ^(1)=1
+convention) and threaded through the scan as stacked inputs alongside the
+per-round PRNG keys; the round counter t rides in the optimizer state as the
+scan carry. Every step emits a metrics dict of scalars, which the scan stacks
+into (K,)-arrays — full per-round trajectories for free, where the Python
+loop only saw chunk boundaries.
+
+``loop_rounds`` is the semantics-identical per-round-dispatch reference used
+by the equivalence test (tests/test_rounds.py) and the scan-vs-loop
+rounds-per-second benchmark (benchmarks/rounds_bench.py).
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+
+
+class RoundInputs(NamedTuple):
+    """Per-round scan inputs: each leaf has a leading (K,) round axis."""
+    key: jnp.ndarray          # (K, 2) per-round PRNG keys
+    rho: jnp.ndarray          # (K,) ρ^t
+    gamma: jnp.ndarray        # (K,) γ^t
+
+    @property
+    def num_rounds(self):
+        return self.rho.shape[0]
+
+
+def schedule_arrays(fl, t_start: int, num_rounds: int):
+    """(ρ^t, γ^t) for t = t_start .. t_start+K-1, with the paper's ρ^(1) = 1
+    convention applied (§III-A, before eq. (11)) — matches optimizer._sched."""
+    t = jnp.arange(t_start, t_start + num_rounds)
+    rho = jnp.where(t == 1, 1.0, schedules.rho(t, fl.a1, fl.alpha_rho))
+    gamma = schedules.gamma(t, fl.a2, fl.alpha_gamma)
+    return rho, gamma
+
+
+def make_inputs(fl, t_start: int, num_rounds: int, key) -> RoundInputs:
+    rho, gamma = schedule_arrays(fl, t_start, num_rounds)
+    return RoundInputs(key=jax.random.split(key, num_rounds),
+                       rho=rho, gamma=gamma)
+
+
+def scan_rounds(step_fn: Callable, state, inputs: RoundInputs):
+    """Run K = inputs.num_rounds rounds as ONE jitted lax.scan dispatch.
+
+    step_fn(state, inp) -> (state, metrics-dict-of-scalars); returns the final
+    state and the metrics dict stacked to (K,) arrays. The jitted callable is
+    cached per step_fn identity (bounded LRU), so chunked callers and repeat
+    invocations with the same step compile once.
+    """
+    return _scan_jit(step_fn)(state, inputs)
+
+
+# Caches keyed weakly by step_fn identity. Cross-CALL reuse (not just within
+# one run_rounds) is load-bearing: chunked runs and the benchmark's timing
+# repeats re-invoke scan_rounds/loop_rounds with the same step and must not
+# retrace. Weak keying ties each entry's lifetime to the caller's step
+# closure — a step captures its whole client dataset, and the compiled
+# executable bakes those arrays in as constants, so the entry (and the
+# dataset) is released as soon as the caller drops the closure. The cached
+# callable itself only holds a weakref to step_fn, which is live whenever
+# the entry is reachable.
+_SCAN_CACHE = weakref.WeakKeyDictionary()
+_STEP_CACHE = weakref.WeakKeyDictionary()
+
+
+def _weak_cached(cache, step_fn, make):
+    fn = cache.get(step_fn)
+    if fn is None:
+        fn = make(weakref.ref(step_fn))
+        cache[step_fn] = fn
+    return fn
+
+
+def _scan_jit(step_fn):
+    return _weak_cached(
+        _SCAN_CACHE, step_fn,
+        lambda ref: jax.jit(
+            lambda state, inputs: jax.lax.scan(ref(), state, inputs)))
+
+
+def _step_jit(step_fn):
+    return _weak_cached(
+        _STEP_CACHE, step_fn,
+        lambda ref: jax.jit(lambda state, inp: ref()(state, inp)))
+
+
+def loop_rounds(step_fn: Callable, state, inputs: RoundInputs):
+    """Reference driver: same step, one jitted dispatch per round (the seed's
+    execution model). Kept for the equivalence test and the benchmark. The
+    jitted step shares the bounded per-step cache, so repeat calls (benchmark
+    timing loops, chunked runs) do not retrace."""
+    step = _step_jit(step_fn)
+    ms = []
+    for r in range(inputs.num_rounds):
+        state, m = step(state, jax.tree.map(lambda x: x[r], inputs))
+        ms.append(m)
+    stacked = {k: jnp.stack([m[k] for m in ms]) for k in ms[0]} if ms else {}
+    return state, stacked
+
+
+class RunResult(NamedTuple):
+    params: object
+    history: dict             # eval-metric name -> (n_evals,) + per-round arrays
+    final_state: object
+
+
+ENGINES = {"scan": scan_rounds, "loop": loop_rounds}
+
+
+def chunk_sizes(rounds: int, chunk: int):
+    """Split `rounds` into chunk-sized dispatches, never dropping the partial
+    final chunk (shared invariant of run_rounds and launch/train.py)."""
+    chunk = max(1, min(chunk, rounds))
+    sizes = [chunk] * (rounds // chunk)
+    if rounds % chunk:
+        sizes.append(rounds % chunk)
+    return sizes
+
+
+def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
+               eval_fn: Optional[Callable] = None, eval_every: int = 0,
+               extract_params: Callable = lambda s: s.params,
+               t_start: int = 1, driver: str = "scan") -> RunResult:
+    """High-level driver: scan-compile rounds, with optional periodic host
+    evaluation between scan chunks.
+
+    With eval_fn=None the K rounds are one dispatch; with eval_every=E each
+    E-round chunk is one dispatch and eval_fn(params, state) runs between
+    chunks. history carries the eval series under their own names keyed by
+    "round", plus every step metric as a full (K,) per-round series under
+    "round_<name>" (with "round_t" = t_start..t_start+K-1).
+    """
+    engine = ENGINES[driver]
+    if rounds <= 0:
+        return RunResult(extract_params(state), {"round": jnp.zeros((0,))},
+                         state)
+    # eval_every <= 0 with an eval_fn means "evaluate every round" (seed
+    # semantics); without an eval_fn all rounds are one dispatch.
+    chunk = (max(1, eval_every) if eval_fn is not None else rounds)
+    sizes = chunk_sizes(rounds, chunk)
+
+    hist: dict = {"round": []}
+    per_round: list = []
+    t0 = t_start
+    for size in sizes:
+        key, sub = jax.random.split(key)
+        state, ms = engine(step_fn, state, make_inputs(fl, t0, size, sub))
+        t0 += size
+        per_round.append(ms)
+        if eval_fn is not None:
+            metrics = eval_fn(extract_params(state), state)
+            for k, v in metrics.items():
+                hist.setdefault(k, []).append(v)
+            hist["round"].append(t0 - t_start)
+    history = {k: jnp.asarray(v) for k, v in hist.items()}
+    if per_round and per_round[0]:
+        for k in per_round[0]:
+            history["round_" + k] = jnp.concatenate([m[k] for m in per_round])
+        history["round_t"] = jnp.arange(t_start, t0)
+    return RunResult(extract_params(state), history, state)

@@ -33,6 +33,36 @@ def classification_dataset(key, n: int = 60_000, num_features: int = 784,
     return train, test
 
 
+def federated_classification_dataset(key, num_clients: int, n: int = 60_000,
+                                     num_features: int = 784,
+                                     num_classes: int = 10, noise: float = 1.0,
+                                     test_n: int = 10_000,
+                                     dirichlet_alpha: float = None):
+    """classification_dataset pre-partitioned into client shards.
+
+    dirichlet_alpha=None gives the seed's IID equal shards; a float α draws
+    the standard Dirichlet(α) label-skew partition (fed.partition_dirichlet),
+    producing ragged non-IID N_i — the statistical-heterogeneity regime the
+    paper's Theorems 1-4 cover (N_i varies).
+
+    Returns (SampleFedData, (z_train, y_train, labels), (z_test, y_test,
+    labels_test)).
+    """
+    from repro.core import fed
+
+    train, test = classification_dataset(key, n=n, num_features=num_features,
+                                         num_classes=num_classes, noise=noise,
+                                         test_n=test_n)
+    z, y, _ = train
+    pkey = jax.random.fold_in(key, 0xfed)
+    if dirichlet_alpha is None:
+        data = fed.partition_samples(z, y, num_clients, key=pkey)
+    else:
+        data = fed.partition_dirichlet(z, y, num_clients, pkey,
+                                       alpha=dirichlet_alpha)
+    return data, train, test
+
+
 def token_dataset(key, vocab_size: int, n_tokens: int, order: int = 1):
     """Markov bigram stream: next-token depends on current via a random sparse
     transition; gives a learnable LM signal with nonzero optimal loss."""
@@ -50,16 +80,18 @@ def token_dataset(key, vocab_size: int, n_tokens: int, order: int = 1):
     return toks
 
 
+def sample_window(tokens, key, batch: int, seq: int):
+    """One {tokens, targets} batch of random (seq+1)-token windows. Pure and
+    traceable — the scan-compiled train driver calls it inside jit."""
+    n = tokens.shape[0] - seq - 1
+    starts = jax.random.randint(key, (batch,), 0, n)
+    idx = starts[:, None] + jnp.arange(seq + 1)[None, :]
+    window = tokens[idx]
+    return {"tokens": window[:, :-1], "targets": window[:, 1:]}
+
+
 def make_batch_iterator(tokens, batch: int, seq: int, key):
     """Infinite iterator of {tokens, targets} windows."""
-    n = tokens.shape[0] - seq - 1
-
-    def get(k):
-        starts = jax.random.randint(k, (batch,), 0, n)
-        idx = starts[:, None] + jnp.arange(seq + 1)[None, :]
-        window = tokens[idx]
-        return {"tokens": window[:, :-1], "targets": window[:, 1:]}
-
     while True:
         key, sub = jax.random.split(key)
-        yield get(sub)
+        yield sample_window(tokens, sub, batch, seq)

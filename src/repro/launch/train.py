@@ -3,8 +3,15 @@ model under pjit. The per-round client upload/aggregate of Algorithm 1/2 is
 realized by the data-axis all-reduce that pjit inserts for the batch-mean
 gradient (clients = data shards, equal N_i; see DESIGN.md §2/§7).
 
+The single-host driver is scan-compiled (DESIGN.md §6): batch selection,
+gradient, and the SSCA update for a whole log interval run as ONE ``lax.scan``
+dispatch via core/rounds.py, with the ρ^t/γ^t schedules threaded as scan
+inputs. ``--driver loop`` keeps the seed's one-dispatch-per-step execution
+for comparison (benchmarks/rounds_bench.py quantifies the gap).
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
-          --steps 100 --batch 8 --seq 512 [--constrained] [--smoke]
+          --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
+          [--driver scan|loop]
 """
 from __future__ import annotations
 
@@ -17,18 +24,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import FLConfig, get_config
-from repro.core import optimizer
+from repro.core import optimizer, rounds
 from repro.launch import mesh as mesh_lib
 from repro.models import get_model
 
 
 def make_train_step(model, cfg, fl: FLConfig):
-    """Returns train_step(state, batch) -> (state, metrics). Unconstrained
-    Algorithm-1-example update (= momentum SGD w/ diminishing stepsizes)."""
+    """Returns train_step(state, batch[, rho_t, gamma_t]) -> (state, metrics).
+    Unconstrained Algorithm-1-example update (= momentum SGD w/ diminishing
+    stepsizes). rho_t/gamma_t default to the state.t-derived schedule; the
+    scan driver passes them precomputed per round."""
 
-    def train_step(state, batch):
+    def train_step(state, batch, rho_t=None, gamma_t=None):
         loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
-        new = optimizer.ssca_step(state, grads, fl)
+        new = optimizer.ssca_step(state, grads, fl, rho_t=rho_t, gamma_t=gamma_t)
         return new, {"loss": loss, "t": state.t}
 
     return train_step
@@ -37,9 +46,10 @@ def make_train_step(model, cfg, fl: FLConfig):
 def make_constrained_train_step(model, cfg, fl: FLConfig):
     """Algorithm-2-example: min ‖ω‖² s.t. mean-loss <= U (formulation (40))."""
 
-    def train_step(state, batch):
+    def train_step(state, batch, rho_t=None, gamma_t=None):
         loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
-        new = optimizer.ssca_constrained_step(state, grads, loss, fl)
+        new = optimizer.ssca_constrained_step(state, grads, loss, fl,
+                                              rho_t=rho_t, gamma_t=gamma_t)
         return new, {"loss": loss, "nu": new.nu, "slack": new.slack,
                      "l2": sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                                for x in jax.tree.leaves(new.params))}
@@ -76,11 +86,28 @@ def jit_train_step(model, cfg, fl, mesh, batch_like, constrained=False):
 # ---------------------------------------------------------------------------
 
 
+def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
+                      constrained: bool = False):
+    """Fuses per-round data selection into the train step so the whole round
+    chain is scannable: step(state, RoundInputs) -> (state, metrics)."""
+    from repro.data.synthetic import sample_window
+
+    train_step = (make_constrained_train_step if constrained
+                  else make_train_step)(model, cfg, fl)
+
+    def step(state, inp):
+        data = sample_window(tokens, inp.key, batch, seq)
+        return train_step(state, data, rho_t=inp.rho, gamma_t=inp.gamma)
+
+    return step
+
+
 def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                smoke: bool = False, constrained: bool = False,
                fl: Optional[FLConfig] = None, log_every: int = 10,
-               ckpt_path: Optional[str] = None, seed: int = 0):
-    from repro.data.synthetic import make_batch_iterator, token_dataset
+               ckpt_path: Optional[str] = None, seed: int = 0,
+               driver: str = "scan"):
+    from repro.data.synthetic import token_dataset
 
     cfg = get_config(arch)
     if smoke:
@@ -95,21 +122,25 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
 
     toks = token_dataset(jax.random.fold_in(key, 1), cfg.vocab_size,
                          n_tokens=max(200_000, batch * (seq + 1) * 4))
-    it = make_batch_iterator(toks, batch, seq, jax.random.fold_in(key, 2))
-    step_fn = jax.jit((make_constrained_train_step if constrained
-                       else make_train_step)(model, cfg, fl))
+    step_fn = make_scanned_step(model, cfg, fl, toks, batch, seq, constrained)
+    engine = rounds.ENGINES[driver]
+    sizes = rounds.chunk_sizes(steps, log_every)
 
     logs = []
-    t0 = time.time()
-    for i in range(steps):
-        state, metrics = step_fn(state, next(it))
-        if (i + 1) % log_every == 0 or i == 0:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = i + 1
-            m["wall_s"] = time.time() - t0
-            logs.append(m)
-            print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
-                           for k, v in m.items()), flush=True)
+    t0, done = 1, 0
+    key_run = jax.random.fold_in(key, 2)
+    wall0 = time.time()
+    for size in sizes:
+        key_run, sub = jax.random.split(key_run)
+        state, ms = engine(step_fn, state, rounds.make_inputs(fl, t0, size, sub))
+        t0 += size
+        done += size
+        m = {k: float(v[-1]) for k, v in ms.items()}
+        m["step"] = done
+        m["wall_s"] = time.time() - wall0
+        logs.append(m)
+        print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in m.items()), flush=True)
     if ckpt_path:
         from repro.checkpoint import save_checkpoint
         save_checkpoint(ckpt_path, state.params, step=steps)
@@ -124,10 +155,12 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--constrained", action="store_true")
+    ap.add_argument("--driver", choices=("scan", "loop"), default="scan")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     train_loop(args.arch, args.steps, args.batch, args.seq, smoke=args.smoke,
-               constrained=args.constrained, ckpt_path=args.ckpt)
+               constrained=args.constrained, ckpt_path=args.ckpt,
+               driver=args.driver)
 
 
 if __name__ == "__main__":

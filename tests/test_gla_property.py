@@ -2,6 +2,10 @@
 form used by mamba2/mLSTM): the blocked algorithm must equal the naive
 step-by-step recurrence for any chunk size, and prefill states must continue
 the recurrence exactly."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,13 +1,16 @@
 """§Perf knobs must be semantics-preserving: chunked (flash-style) attention,
 sequence-sharded activations, and expert2d MoE sharding all compute the same
 function as the baseline."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 import dataclasses
 
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.configs.registry import ARCHS

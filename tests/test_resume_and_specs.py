@@ -1,6 +1,10 @@
 """Framework-property tests: checkpoint/resume bit-equivalence for SSCA
 training (params + surrogate state), streaming-data rounds (paper footnote 3),
 and fit_specs invariants (hypothesis)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,13 @@
 """Unit + property tests for stepsize schedules and convex-subproblem solvers."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import schedules
