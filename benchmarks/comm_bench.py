@@ -1,0 +1,105 @@
+"""Bytes-on-wire vs final-loss tradeoff for the compression subsystem
+(DESIGN.md §10) — the Fig.-3 axis, measured instead of asserted.
+
+Runs the quickstart workload (Algorithm 1, the paper's two-layer swish net
+on synthetic MNIST-shaped Gaussians) under every codec and records, per
+codec: total/ per-round upload bytes from repro.comm.accounting, the
+compression ratio over dense fp32, and the final training cost. Prints
+``name,us_per_call,derived`` CSV rows like the other benches, writes the
+curve to JSON (BENCH_comm.json in CI), and claim-checks the acceptance
+criterion: int8 stochastic quantization within 2% relative final loss of
+the uncompressed run at >= 3.5x fewer upload bytes.
+
+Usage:  PYTHONPATH=src python -m benchmarks.comm_bench [--smoke]
+            [--rounds 300] [--n 20000] [--json BENCH_comm.json]
+"""
+import argparse
+import json
+import time
+
+
+def comm_tradeoff(rounds: int = 300, n: int = 20_000, clients: int = 10,
+                  json_path: str = None, topk_frac: float = 0.05):
+    import jax
+    import numpy as np
+
+    from repro.comm import accounting, make_codec
+    from repro.comm.codecs import tree_flat_dim
+    from repro.configs.base import FLConfig
+    from repro.core import algorithms, fed
+    from repro.data.synthetic import classification_dataset
+    from repro.models import mlp
+
+    key = jax.random.PRNGKey(0)
+    (z, y, _), _ = classification_dataset(key, n=n, num_features=784,
+                                          num_classes=10, test_n=100,
+                                          noise=4.0)
+    params0 = mlp.init(jax.random.PRNGKey(1), 784, 64, 10)
+    data = fed.partition_samples(z, y, num_clients=clients)
+    fl = FLConfig(num_clients=clients, batch_size=100, a1=0.3, a2=0.3,
+                  alpha_rho=0.1, alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
+    dim = tree_flat_dim(params0)
+
+    def eval_fn(params, state):
+        return {"cost": float(mlp.mean_loss(params, z, y))}
+
+    results = []
+    for name in ("none", "int8", "int4", "topk", "topk8"):
+        codec = make_codec(name, topk_frac=topk_frac)
+        t0 = time.perf_counter()
+        r = algorithms.algorithm1(mlp.per_sample_loss, params0, data, fl,
+                                  rounds, jax.random.PRNGKey(2),
+                                  eval_fn=eval_fn, eval_every=rounds,
+                                  codec=codec)
+        jax.block_until_ready(r.params)
+        wall = time.perf_counter() - t0
+        up_total = float(np.asarray(r.history["round_upload_bytes"]).sum())
+        res = {
+            "codec": name, "rounds": rounds, "final_cost":
+                float(r.history["cost"][-1]),
+            "upload_bytes_total": up_total,
+            "upload_bytes_per_round": up_total / rounds,
+            "compression_ratio":
+                accounting.compression_ratio(codec, dim) if codec else 1.0,
+            "wall_s": wall,
+        }
+        results.append(res)
+        print(f"comm_codec_{name},{1e6 * wall / rounds:.1f},"
+              f"final_cost={res['final_cost']:.4f},"
+              f"upload_bytes_per_round={res['upload_bytes_per_round']:.0f},"
+              f"ratio={res['compression_ratio']:.2f}x", flush=True)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"# wrote {json_path}", flush=True)
+
+    # acceptance claim-check (ISSUE 2): int8 within 2% at >= 3.5x fewer bytes
+    dense = next(r for r in results if r["codec"] == "none")
+    int8 = next(r for r in results if r["codec"] == "int8")
+    rel = abs(int8["final_cost"] - dense["final_cost"]) / dense["final_cost"]
+    ratio = dense["upload_bytes_total"] / int8["upload_bytes_total"]
+    print(f"comm_int8_claim,0,rel_loss_gap={rel:.4f},bytes_ratio={ratio:.2f}x",
+          flush=True)
+    assert rel < 0.02, f"int8 final-loss gap {rel:.3%} exceeds 2%"
+    assert ratio >= 3.5, f"int8 byte ratio {ratio:.2f}x below 3.5x"
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (~1 min CPU)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--topk-frac", type=float, default=0.05)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rounds = args.rounds or (60 if args.smoke else 300)
+    n = args.n or (2_000 if args.smoke else 20_000)
+    comm_tradeoff(rounds=rounds, n=n, json_path=args.json,
+                  topk_frac=args.topk_frac)
+
+
+if __name__ == "__main__":
+    main()

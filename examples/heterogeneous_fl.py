@@ -1,24 +1,30 @@
-"""Heterogeneous federated learning: non-IID clients + partial participation.
+"""Heterogeneous federated learning: non-IID clients + partial participation
++ compressed uploads.
 
     PYTHONPATH=src python examples/heterogeneous_fl.py [--rounds 200] [--n 20000]
 
 The paper's convergence theory (Theorems 1-4) is stated for heterogeneous
 client datasets (N_i varies) and holds under unbiased gradient estimates —
 which per-round client sampling preserves (fed.aggregation_weights). This
-example sweeps the two practical-FL axes the companion literature emphasizes:
+example sweeps the three practical-FL axes the companion literature
+emphasizes:
 
   * statistical heterogeneity: Dirichlet(α) label-skew partitions with
     α ∈ {0.1 (near single-class clients), 100 (≈IID)}, ragged N_i;
   * systems heterogeneity: S = 3 of I = 10 clients participating per round,
-    aggregation reweighted by I/S to stay unbiased.
+    aggregation reweighted by I/S to stay unbiased;
+  * communication budget: dense fp32 uploads vs int8 stochastic quantization
+    (unbiased) vs top-k sparsification with error feedback (DESIGN.md §10),
+    with exact per-round upload bytes from repro.comm.accounting.
 
-All four scenario cells run Algorithm 1 through the scan-compiled round
-driver (one XLA dispatch per eval chunk) and print final cost/accuracy.
+All scenario cells run Algorithm 1 through the scan-compiled round driver
+(one XLA dispatch per eval chunk) and print final cost/accuracy/bytes.
 """
 import argparse
 
 import jax
 
+from repro.comm import make_codec
 from repro.configs.base import FLConfig
 from repro.core import algorithms, fed
 from repro.data.synthetic import classification_dataset
@@ -31,9 +37,14 @@ def main():
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--participation", type=int, default=3)
+    ap.add_argument("--codecs", default="none,int8,topk",
+                    help="comma-separated codec axis "
+                         "(none|identity|int8|int4|topk|topk8)")
+    ap.add_argument("--topk-frac", type=float, default=0.05)
     args = ap.parse_args()
     if args.rounds < 1 or args.participation < 1:
         ap.error("--rounds and --participation must be >= 1")
+    codec_names = [c.strip() for c in args.codecs.split(",") if c.strip()]
 
     key = jax.random.PRNGKey(0)
     print(f"building synthetic dataset (N={args.n}, P=784, L=10) ...")
@@ -55,19 +66,25 @@ def main():
         counts = [int(c) for c in data.counts]
         print(f"\nDirichlet(alpha={alpha}) [{tag}]  N_i = {counts}")
         for part in (None, args.participation):
-            label = (f"alpha={alpha:<5g} S={part or args.clients}/"
-                     f"{args.clients}")
-            r = algorithms.algorithm1(
-                mlp.per_sample_loss, params0, data, fl, args.rounds,
-                jax.random.PRNGKey(2), eval_fn=eval_fn,
-                eval_every=args.rounds, participation=part)
-            cost, acc = float(r.history["cost"][-1]), float(r.history["acc"][-1])
-            scenarios.append((label, cost, acc))
-            print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}")
+            for cname in codec_names:
+                codec = make_codec(cname, topk_frac=args.topk_frac)
+                label = (f"alpha={alpha:<5g} S={part or args.clients}/"
+                         f"{args.clients} codec={cname:<5s}")
+                r = algorithms.algorithm1(
+                    mlp.per_sample_loss, params0, data, fl, args.rounds,
+                    jax.random.PRNGKey(2), eval_fn=eval_fn,
+                    eval_every=args.rounds, participation=part, codec=codec)
+                cost = float(r.history["cost"][-1])
+                acc = float(r.history["acc"][-1])
+                up_mb = float(r.history["round_upload_bytes"].sum()) / 1e6
+                scenarios.append((label, cost, acc, up_mb))
+                print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}  "
+                      f"upload={up_mb:.1f}MB")
 
     print("\nscenario summary (Algorithm 1, scan driver):")
-    for label, cost, acc in scenarios:
-        print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}")
+    for label, cost, acc, up_mb in scenarios:
+        print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}  "
+              f"upload={up_mb:.1f}MB")
 
 
 if __name__ == "__main__":

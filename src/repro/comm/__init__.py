@@ -1,0 +1,36 @@
+"""Communication-compression subsystem (DESIGN.md §10).
+
+The paper's headline beyond convergence speed is communication load per
+round (Fig. 3 plots bytes-on-wire); this package *reduces* those bytes
+instead of merely accounting for them. Three modules:
+
+  codecs.py          lossy upload codecs behind one ``Codec`` protocol
+                     (identity, stochastic-rounding int8/int4 with per-chunk
+                     scales, top-k sparsification, top-k∘quantize chain)
+  error_feedback.py  per-client compression residuals carried through the
+                     scan as part of the round carry (EF re-injects what the
+                     codec dropped, next round)
+  accounting.py      exact bytes-on-wire bookkeeping — subsumes the Fig.-3
+                     float counters formerly inlined in core/fed.py
+
+The SSCA surrogate recursion is unusually compression-friendly: the
+ρ-averaging of eq. (9) already low-pass-filters the q-uploads, so unbiased
+codecs (stochastic rounding) slot in without touching the convergence story,
+and biased ones (top-k) are debiased-in-the-limit by error feedback.
+"""
+from repro.comm.accounting import (CommLedger, comm_load_per_round,
+                                   compression_ratio, feature_round_bytes,
+                                   sample_round_bytes, vector_nbytes)
+from repro.comm.codecs import (Chain, Codec, Identity, StochasticQuantizer,
+                               TopK, flatten_stacked, flatten_tree,
+                               make_codec, tree_flat_dim)
+from repro.comm.error_feedback import (CommCarry, ef_init, ef_init_stacked,
+                                       ef_roundtrip, with_comm_carry)
+
+__all__ = [
+    "Chain", "Codec", "CommCarry", "CommLedger", "Identity",
+    "StochasticQuantizer", "TopK", "comm_load_per_round", "compression_ratio",
+    "ef_init", "ef_init_stacked", "ef_roundtrip", "feature_round_bytes",
+    "flatten_stacked", "flatten_tree", "make_codec", "sample_round_bytes",
+    "tree_flat_dim", "vector_nbytes", "with_comm_carry",
+]

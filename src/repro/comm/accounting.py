@@ -1,0 +1,102 @@
+"""Exact bytes-on-wire bookkeeping for federated rounds (DESIGN.md §10).
+
+Subsumes and extends the Fig.-3 per-round float counters that used to live
+inline in ``core/fed.py`` (``comm_load_per_round`` moved here; ``fed``
+re-exports it unchanged). The byte-level functions know about codecs: a
+compressed q-upload is charged its exact wire size (``codec.nbytes``),
+downlink broadcasts and the feature-based h-exchange stay dense fp32 unless
+stated otherwise. ``CommLedger`` accumulates per-round dicts so drivers and
+benchmarks report totals and the compression ratio measured, not asserted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+F32_BYTES = 4
+
+
+def vector_nbytes(p: int, codec=None) -> int:
+    """Wire bytes of one P-dim upload: dense fp32, or the codec's format."""
+    return F32_BYTES * p if codec is None else codec.nbytes(p)
+
+
+def compression_ratio(codec, p: int) -> float:
+    """Dense-fp32 bytes over codec bytes for a P-vector (>= 1 is smaller)."""
+    return (F32_BYTES * p) / vector_nbytes(p, codec)
+
+
+def sample_round_bytes(d: int, num_clients: int, codec=None,
+                       participation: Optional[int] = None,
+                       with_value: bool = False,
+                       num_constraints: int = 0) -> Dict[str, int]:
+    """Bytes for one Algorithm-1/2 round: S of I clients upload their
+    (possibly compressed) q-gradient (+ fp32 value scalars for the
+    constrained variants), the server broadcasts dense ω to all I."""
+    s = num_clients if participation is None else min(participation,
+                                                      num_clients)
+    per_client = ((1 + num_constraints) * vector_nbytes(d, codec)
+                  + (num_constraints + (1 if with_value else 0)) * F32_BYTES)
+    up = s * per_client
+    down = num_clients * F32_BYTES * d
+    return {"up": up, "down": down, "total": up + down}
+
+
+def feature_round_bytes(d_head: int, d_blocks: Sequence[int], batch_size: int,
+                        h_dim: int, num_clients: int,
+                        codec=None) -> Dict[str, int]:
+    """Bytes for one Algorithm-3/4 round: dense h-exchange between the I
+    clients (B·H floats from each client to each other client), compressed
+    q_{f,0,0} head upload and q_{f,0,i} block uploads, dense broadcast."""
+    h_x = F32_BYTES * batch_size * h_dim * num_clients * (num_clients - 1)
+    up = (vector_nbytes(d_head, codec)
+          + sum(vector_nbytes(db, codec) for db in d_blocks))
+    down = num_clients * F32_BYTES * (d_head + sum(d_blocks))
+    return {"up": up, "down": down, "h_exchange": h_x,
+            "total": up + down + h_x}
+
+
+@dataclass
+class CommLedger:
+    """Running per-round byte totals; feed it the dicts above."""
+    rounds: int = 0
+    totals: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, round_bytes: Dict[str, int], n: int = 1) -> "CommLedger":
+        self.rounds += n
+        for k, v in round_bytes.items():
+            self.totals[k] = self.totals.get(k, 0) + n * v
+        return self
+
+    def summary(self) -> Dict[str, float]:
+        out = {"rounds": self.rounds, **self.totals}
+        if self.rounds:
+            out.update({f"{k}_per_round": v / self.rounds
+                        for k, v in self.totals.items()})
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 float counters (moved verbatim from core/fed.py; fed re-exports)
+# ---------------------------------------------------------------------------
+
+
+def comm_load_per_round(mode: str, d: int, d_blocks: Sequence[int] = (),
+                        batch_size: int = 0, h_dim: int = 0,
+                        num_clients: int = 0, num_constraints: int = 0):
+    """Floats communicated per round (paper's per-round load accounting).
+
+    sample-based (Alg 1/2): each client uploads d (+M·(1+d)); server broadcasts d.
+    feature-based (Alg 3/4): h-exchange B·H·I·(I-1) between clients, block
+    gradients d_i up, broadcast d down.
+    """
+    m = num_constraints
+    if mode == "sample":
+        up = num_clients * (d + m * (1 + d))
+        down = num_clients * d
+        return {"up": up, "down": down, "total": up + down}
+    h_x = batch_size * h_dim * num_clients * (num_clients - 1) * (1 + m)
+    up = sum(d_blocks) * (1 + m) + (d - sum(d_blocks)) * (1 + m) + m * num_clients
+    down = num_clients * d
+    return {"up": up, "down": down, "h_exchange": h_x,
+            "total": up + down + h_x}

@@ -1,0 +1,77 @@
+"""Error feedback (EF14/EF-SGD style) for compressed q-uploads.
+
+Each client keeps a residual r_i of what its codec dropped so far; before
+encoding it adds the residual back:
+
+    target  = q_i + r_i
+    enc     = codec.encode(target)          # crosses the wire
+    r_i'    = target - decode(enc)          # re-injected next round
+
+For unbiased codecs (stochastic rounding) EF is a harmless variance
+reducer; for biased ones (top-k) it is what makes the trajectory track the
+dense one — every coordinate's accumulated mass eventually exceeds the
+top-k threshold and gets flushed, so as k -> P the compressed trajectory
+recovers the dense trajectory exactly (tests/test_comm.py pins k = P).
+
+The residuals are *state*: they ride through the scan-compiled round driver
+as part of the carry, wrapped in :class:`CommCarry` next to the optimizer
+state (``core/rounds.py::unwrap_comm`` peels the wrapper when extracting
+params). Under partial participation a non-selected client neither uploads
+nor touches its residual — ``ef_roundtrip(active=...)`` freezes it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class CommCarry(NamedTuple):
+    """Scan carry = inner optimizer state + per-client EF residuals."""
+    opt: object                    # SSCAState / SGDState / ... (has .params)
+    ef: object                     # residual vector(s): (P,), (I, P), or dict
+
+
+def ef_init(dim: int):
+    """Residual for a single P-dim upload stream (e.g. the pjit train loop's
+    all-reduced gradient, or the feature-based head upload)."""
+    return jnp.zeros((dim,), jnp.float32)
+
+
+def ef_init_stacked(num_clients: int, dim: int):
+    """Per-client residuals for sample-based rounds: one (P,) vector each."""
+    return jnp.zeros((num_clients, dim), jnp.float32)
+
+
+def with_comm_carry(codec, body):
+    """Wrap a round body into a (state, inp) scan step with the EF carry
+    handled in ONE place (every driver shares this, so no copy can forget
+    the residual rewrap). ``body(state, inp, ef) -> (new_state, new_ef,
+    metrics)`` receives ef=None when no codec is configured; with a codec
+    the step's state is CommCarry(opt=state, ef=residuals)."""
+    def step(state, inp):
+        if codec is None:
+            new, _, metrics = body(state, inp, None)
+            return new, metrics
+        new, new_ef, metrics = body(state.opt, inp, state.ef)
+        return CommCarry(opt=new, ef=new_ef), metrics
+
+    return step
+
+
+def ef_roundtrip(codec, x, residual, key=None, active=None):
+    """One error-feedback compression step on a flat upload vector.
+
+    Returns (enc, x_hat, new_residual). ``active`` (0/1 scalar, typically a
+    participation-mask entry under vmap) freezes the residual of a client
+    that did not upload this round; its x_hat is zero-masked server-side by
+    the aggregation weights, so only the residual needs guarding.
+
+    Conservation invariant (any codec): x_hat + new_residual == x + residual.
+    """
+    target = x + residual
+    enc, x_hat = codec.roundtrip(target, key)
+    new_residual = target - x_hat
+    if active is not None:
+        new_residual = jnp.where(active > 0, new_residual, residual)
+    return enc, x_hat, new_residual

@@ -10,6 +10,13 @@ The sample-based drivers (Algorithms 1/2) take ``participation=S`` to sample
 S of I clients uniformly per round, with the unbiased I/S-reweighted
 N_i/(B_i·N) aggregation of `fed.aggregation_weights`; they accept ragged
 (e.g. Dirichlet-partitioned) client datasets transparently.
+
+Every driver takes ``codec=`` (repro.comm): q-uploads then cross the client
+boundary in the codec's wire format, per-client error-feedback residuals
+ride through the scan carry in a ``CommCarry`` wrapper, and each round's
+metrics gain ``upload_bytes`` — the exact bytes-on-wire of that round's
+uplink (repro.comm.accounting), so history["round_upload_bytes"] is the
+Fig.-3 x-axis measured, not asserted.
 """
 from __future__ import annotations
 
@@ -18,6 +25,10 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import accounting as comm_accounting
+from repro.comm import codecs as comm_codecs
+from repro.comm.error_feedback import (CommCarry, ef_init, ef_init_stacked,
+                                       with_comm_carry)
 from repro.core import fed, optimizer
 from repro.core import rounds as rounds_lib
 from repro.core.fed import FeatureFedData, SampleFedData
@@ -25,15 +36,43 @@ from repro.core.rounds import RunResult  # re-exported (public API since seed)
 
 
 def _run(step_fn, state, key, num_rounds: int, eval_fn: Optional[Callable],
-         eval_every: int, extract_params, fl=None, driver: str = "scan"):
+         eval_every: int, extract_params=None, fl=None, driver: str = "scan"):
     """Back-compat driver shim shared with baselines/local_updates: step_fn
     has the rounds.py signature step(state, RoundInputs-slice) -> (state,
     metrics). fl is only needed for the schedule inputs; steps that ignore
-    rho/gamma (SGD baselines) may pass fl=None."""
+    rho/gamma (SGD baselines) may pass fl=None. extract_params=None uses the
+    CommCarry-aware default (rounds.unwrap_comm)."""
     fl = fl if fl is not None else _NULL_SCHED
     return rounds_lib.run_rounds(step_fn, state, fl, key, num_rounds,
                              eval_fn=eval_fn, eval_every=eval_every,
                              extract_params=extract_params, driver=driver)
+
+
+def _sample_upload_bytes(uploads, grad_est, data, participation,
+                         with_value: bool = False):
+    """Static per-round uplink bytes metric: with a codec, fed.sample_round
+    already computed the exact wire bytes (uploads["upload_nbytes"]) — reuse
+    it so accounting has ONE call site per round; the dense path derives the
+    fp32 bytes from the (trace-time static) grad shapes."""
+    if uploads["upload_nbytes"] is not None:
+        return float(uploads["upload_nbytes"])
+    return float(comm_accounting.sample_round_bytes(
+        comm_codecs.tree_flat_dim(grad_est), data.num_clients, None,
+        participation=participation, with_value=with_value)["up"])
+
+
+def _wrap_codec_state(state, codec, ef0):
+    """The single CommCarry construction site for every driver: attach the
+    zeroed EF residuals (built by the ef0 thunk, so the dense path allocates
+    nothing) when a codec is in play."""
+    if codec is None:
+        return state
+    return CommCarry(opt=state, ef=ef0())
+
+
+def _sample_ef0(params0, num_clients: int):
+    """Zeroed per-client EF residuals for sample-based q-uploads."""
+    return ef_init_stacked(num_clients, comm_codecs.tree_flat_dim(params0))
 
 
 class _NullSched:
@@ -50,30 +89,37 @@ _NULL_SCHED = _NullSched()
 
 
 def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
-                         participation: Optional[int] = None):
+                         participation: Optional[int] = None, codec=None):
     """One full Algorithm-1 round as a pure (state, RoundInputs) step —
-    batch selection, uploads, aggregation, surrogate recursion, update —
-    suitable for lax.scan (rounds.scan_rounds) or per-round dispatch."""
+    batch selection, uploads (optionally codec-compressed with error
+    feedback), aggregation, surrogate recursion, update — suitable for
+    lax.scan (rounds.scan_rounds) or per-round dispatch. With a codec the
+    state is a CommCarry(opt=SSCAState, ef=(I, P) residuals)."""
 
-    def step(state, inp):
-        grad_est, val_est, _ = fed.sample_round(
+    def body(state, inp, ef):
+        grad_est, val_est, up = fed.sample_round(
             per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            participation=participation)
+            participation=participation, codec=codec, ef=ef)
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
-        return new, {"loss_est": val_est}
+        metrics = {"loss_est": val_est,
+                   "upload_bytes": _sample_upload_bytes(
+                       up, grad_est, data, participation)}
+        return new, up["ef"], metrics
 
-    return step
+    return with_comm_carry(codec, body)
 
 
 def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan") -> RunResult:
-    step = make_algorithm1_step(per_sample_loss, data, fl, participation)
-    state = optimizer.ssca_init(params0)
+               driver: str = "scan", codec=None) -> RunResult:
+    step = make_algorithm1_step(per_sample_loss, data, fl, participation,
+                                codec)
+    state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
+                              lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, driver=driver)
+                fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -82,52 +128,71 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
 
 
 def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
-                         participation: Optional[int] = None):
-    def step(state, inp):
-        grad_est, val_est, _ = fed.sample_round(
+                         participation: Optional[int] = None, codec=None):
+    def body(state, inp, ef):
+        grad_est, val_est, up = fed.sample_round(
             per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            with_value=True, participation=participation)
+            with_value=True, participation=participation, codec=codec, ef=ef)
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
-        return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
+        metrics = {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
+                   "upload_bytes": _sample_upload_bytes(
+                       up, grad_est, data, participation, with_value=True)}
+        return new, up["ef"], metrics
 
-    return step
+    return with_comm_carry(codec, body)
 
 
 def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan") -> RunResult:
-    step = make_algorithm2_step(per_sample_loss, data, fl, participation)
-    state = optimizer.ssca_constrained_init(params0)
+               driver: str = "scan", codec=None) -> RunResult:
+    step = make_algorithm2_step(per_sample_loss, data, fl, participation,
+                                codec)
+    state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
+                              lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, driver=driver)
+                fl=fl, driver=driver)
 
 
 def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                        rounds: int, key, eval_fn=None, eval_every: int = 10,
                        participation: Optional[int] = None,
-                       driver: str = "scan") -> RunResult:
-    """Full Algorithm 2: sampled nonconvex objective AND constraint."""
-    def step(state, inp):
+                       driver: str = "scan", codec=None) -> RunResult:
+    """Full Algorithm 2: sampled nonconvex objective AND constraint. With a
+    codec the objective and constraint q-uploads carry separate EF
+    residuals (ef = {"obj": (I, P), "cons": (I, P)})."""
+    def body(state, inp, ef):
+        ef = ef if ef is not None else {"obj": None, "cons": None}
         k1, k2 = jax.random.split(inp.key)
         # ONE participant set per round: both the objective and the constraint
         # statistics are uploaded by the same S clients (faithful protocol).
         pk = jax.random.fold_in(inp.key, 0x5ca)
-        og, _, _ = fed.sample_round(obj_loss, state.params, data, k1,
-                                    fl.batch_size, participation=participation,
-                                    participation_key=pk)
-        cg, cv, _ = fed.sample_round(cons_loss, state.params, data, k2,
-                                     fl.batch_size, with_value=True,
-                                     participation=participation,
-                                     participation_key=pk)
+        og, _, uo = fed.sample_round(obj_loss, state.params, data, k1,
+                                     fl.batch_size, participation=participation,
+                                     participation_key=pk, codec=codec,
+                                     ef=ef["obj"])
+        cg, cv, uc = fed.sample_round(cons_loss, state.params, data, k2,
+                                      fl.batch_size, with_value=True,
+                                      participation=participation,
+                                      participation_key=pk, codec=codec,
+                                      ef=ef["cons"])
         new = optimizer.ssca_general_constrained_step(
             state, og, cg, cv, fl, rho_t=inp.rho, gamma_t=inp.gamma)
-        return new, {"cons_est": cv, "nu": new.nu, "slack": new.slack}
+        bts = (_sample_upload_bytes(uo, og, data, participation)
+               + _sample_upload_bytes(uc, cg, data, participation,
+                                      with_value=True))
+        metrics = {"cons_est": cv, "nu": new.nu, "slack": new.slack,
+                   "upload_bytes": bts}
+        return new, {"obj": uo["ef"], "cons": uc["ef"]}, metrics
 
-    state = optimizer.ssca_general_constrained_init(params0)
+    step = with_comm_carry(codec, body)
+    state = _wrap_codec_state(
+        optimizer.ssca_general_constrained_init(params0), codec,
+        lambda: {"obj": _sample_ef0(params0, data.num_clients),
+                 "cons": _sample_ef0(params0, data.num_clients)})
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, driver=driver)
+                fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -135,20 +200,59 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
 # ---------------------------------------------------------------------------
 
 
+def _feature_upload_bytes(uploads, grad_est, data, batch_size: int):
+    """Per-round uplink bytes of a feature-based round: the codec path reuses
+    fed.feature_round's exact figure, the dense path derives fp32 bytes from
+    the (static) upload shapes. Shared with baselines.feature_sgd."""
+    if uploads["upload_nbytes"] is not None:
+        return float(uploads["upload_nbytes"])
+    return float(comm_accounting.feature_round_bytes(
+        comm_codecs.tree_flat_dim(grad_est["w0"]),
+        [comm_codecs.tree_flat_dim(grad_est["blocks"], stacked=True)]
+        * data.num_clients,
+        batch_size, uploads["h_exchange"].shape[-1],
+        data.num_clients)["up"])
+
+
+def _feature_ef0(params0, num_clients: int):
+    """Zeroed EF residuals for the feature-based uploads: one head stream +
+    one per-client block stream."""
+    return {"w0": ef_init(comm_codecs.tree_flat_dim(params0["w0"])),
+            "blocks": ef_init_stacked(
+                num_clients,
+                comm_codecs.tree_flat_dim(params0["blocks"], stacked=True))}
+
+
+def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
+                       update_fn):
+    """Shared Algorithm-3/4 step body: feature_round + the given optimizer
+    update, with optional codec/EF threading."""
+    def body(state, inp, ef):
+        grad_est, val_est, up = fed.feature_round(
+            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
+            client_h, codec=codec, ef=ef)
+        new, metrics = update_fn(state, grad_est, val_est, inp)
+        metrics["upload_bytes"] = _feature_upload_bytes(up, grad_est, data,
+                                                       fl.batch_size)
+        return new, up["ef"], metrics
+
+    return with_comm_carry(codec, body)
+
+
 def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan") -> RunResult:
-    def step(state, inp):
-        grad_est, val_est, _ = fed.feature_round(
-            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
-            client_h)
+               driver: str = "scan", codec=None) -> RunResult:
+    def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         return new, {"loss_est": val_est}
 
-    state = optimizer.ssca_init(params0)
+    step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
+                              update)
+    state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
+                              lambda: _feature_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, driver=driver)
+                fl=fl, driver=driver)
 
 
 # ---------------------------------------------------------------------------
@@ -158,15 +262,15 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
 
 def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan") -> RunResult:
-    def step(state, inp):
-        grad_est, val_est, _ = fed.feature_round(
-            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
-            client_h)
+               driver: str = "scan", codec=None) -> RunResult:
+    def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
 
-    state = optimizer.ssca_constrained_init(params0)
+    step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
+                              update)
+    state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
+                              lambda: _feature_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, driver=driver)
+                fl=fl, driver=driver)

@@ -7,6 +7,14 @@
     h-exchange information collection as Algorithm 3
 
 Learning rates follow §VI: SGD r_t = ā/t^ᾱ; SGD-m constant ā, momentum β̄.
+
+Both baselines take ``codec=`` (repro.comm) so the compression comparison is
+apples-to-apples with the SSCA drivers: sample-based SGD compresses each
+client's *model delta* Δ_i = ω_i^local − ω (the round's upload; the weighted
+average Σ w_i(ω + Δ̂_i) = ω + Σ w_i Δ̂_i since Σ w_i = 1), feature-based SGD
+compresses the same q-uploads as Algorithm 3 via ``fed.feature_round``.
+Error-feedback residuals ride the scan carry in a CommCarry, exactly as in
+core/algorithms.py.
 """
 from __future__ import annotations
 
@@ -15,8 +23,14 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import accounting as comm_accounting
+from repro.comm import codecs as comm_codecs
+from repro.comm import error_feedback as comm_ef
+from repro.comm.error_feedback import with_comm_carry
 from repro.core import fed
-from repro.core.algorithms import RunResult, _run
+from repro.core.algorithms import (RunResult, _feature_ef0,
+                                   _feature_upload_bytes, _run,
+                                   _wrap_codec_state)
 from repro.core.fed import FeatureFedData, SampleFedData
 from repro.core.surrogate import tree_axpy, tree_zeros_like
 
@@ -55,10 +69,14 @@ def _reg_grad(per_sample_loss, lam):
 
 def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               momentum: bool = False) -> RunResult:
-    """E local (momentum-)SGD steps per client per round + weighted averaging."""
+               momentum: bool = False, codec=None) -> RunResult:
+    """E local (momentum-)SGD steps per client per round + weighted averaging.
+    With a codec, each client's model delta is the compressed upload."""
     grad_fn = _reg_grad(per_sample_loss, cfg.l2_lambda)
     w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
+    dim = sum(l.size for l in jax.tree.leaves(params0))
+    up_bytes = float(comm_accounting.sample_round_bytes(
+        dim, data.num_clients, codec)["up"])
 
     def local(params_v0, feat_i, lab_i, count_i, k, lr):
         def one(step, carry):
@@ -77,44 +95,69 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
         v0 = tree_zeros_like(params_v0)
         return jax.lax.fori_loop(0, cfg.local_steps, one, (params_v0, v0))
 
-    def step(state, inp):
+    def body(state, inp, ef):
         lr = cfg.lr_a if momentum else _lr(cfg, state.t)
         keys = jax.random.split(inp.key, data.num_clients)
         locals_, _ = jax.vmap(
             lambda f_, l_, c_, k_: local(state.params, f_, l_, c_, k_, lr)
         )(data.features, data.labels, data.counts, keys)
+        new_ef = None
+        if codec is not None:
+            deltas = jax.tree.map(lambda u, p: u - p[None], locals_,
+                                  state.params)
+            df, unflatten = comm_codecs.flatten_stacked(deltas)
+            ckeys = jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
+                                     df.shape[0])
+            _, d_hat, new_ef = jax.vmap(
+                lambda x, r, k_: comm_ef.ef_roundtrip(codec, x, r, k_)
+            )(df, ef, ckeys)
+            locals_ = jax.tree.map(lambda d, p: d + p[None], unflatten(d_hat),
+                                   state.params)
         params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
-        return SGDState(params=params, t=state.t + 1), {}
+        new = SGDState(params=params, t=state.t + 1)
+        return new, new_ef, {"upload_bytes": up_bytes}
 
-    state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    state = _wrap_codec_state(
+        SGDState(params=params0, t=jnp.ones((), jnp.int32)), codec,
+        lambda: comm_ef.ef_init_stacked(data.num_clients, dim))
+    return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
+                eval_every)
 
 
 def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
                 cfg: SGDConfig, rounds: int, key, eval_fn=None,
-                eval_every: int = 10, momentum: bool = False) -> RunResult:
-    """One global (momentum-)SGD step per round via the Alg-3 info collection."""
-    def step(state, inp):
+                eval_every: int = 10, momentum: bool = False,
+                codec=None) -> RunResult:
+    """One global (momentum-)SGD step per round via the Alg-3 info collection
+    (codec compresses the same q-uploads as Algorithm 3)."""
+    def body(state, inp, ef):
         if momentum:
             params, v, t = state.params, state.v, state.t
         else:
             params, t = state.params, state.t
-        grad_est, _, _ = fed.feature_round(params, data, inp.key,
-                                           cfg.local_batch,
-                                           head_loss_from_h, client_h)
+        grad_est, _, up = fed.feature_round(
+            params, data, inp.key, cfg.local_batch, head_loss_from_h,
+            client_h, codec=codec, ef=ef)
         grad_est = jax.tree.map(
             lambda g, p: g + 2 * cfg.l2_lambda * p, grad_est, params)
         lr = cfg.lr_a if momentum else _lr(cfg, t)
         if momentum:
             v = jax.tree.map(lambda vv, gg: cfg.momentum * vv + gg, v, grad_est)
             params = jax.tree.map(lambda p, u: p - lr * u, params, v)
-            return SGDmState(params=params, v=v, t=t + 1), {}
-        params = jax.tree.map(lambda p, g: p - lr * g, params, grad_est)
-        return SGDState(params=params, t=t + 1), {}
+            new = SGDmState(params=params, v=v, t=t + 1)
+        else:
+            params = jax.tree.map(lambda p, g: p - lr * g, params, grad_est)
+            new = SGDState(params=params, t=t + 1)
+        metrics = {"upload_bytes": _feature_upload_bytes(
+            up, grad_est, data, cfg.local_batch)}
+        return new, up["ef"], metrics
 
     if momentum:
         state = SGDmState(params=params0, v=tree_zeros_like(params0),
                           t=jnp.ones((), jnp.int32))
     else:
         state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
-    return _run(step, state, key, rounds, eval_fn, eval_every, lambda s: s.params)
+    state = _wrap_codec_state(
+        state, codec, lambda: _feature_ef0(params0, data.num_clients))
+    return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
+                eval_every)

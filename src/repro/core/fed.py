@@ -5,13 +5,25 @@ accounting (Fig. 3's x/y axes).
 The privacy mechanism of the paper is *model aggregation*: only B-summed
 statistics (q vectors) ever leave a client. The round functions below return
 an `uploads` structure so tests can assert exactly what crossed the boundary.
+
+Both round functions take an optional ``codec=`` (repro.comm.codecs): each
+client's flat q-upload is then lossily compressed (with per-client error
+feedback when an ``ef`` residual is threaded in) before the server decodes
+and aggregates — what crosses the boundary is the codec's wire format, and
+``uploads`` exposes it plus the updated residuals and the exact wire bytes
+(repro.comm.accounting). Byte-level Fig.-3 bookkeeping lives in
+``repro.comm.accounting``; the float counters are re-exported below.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Sequence
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.comm import accounting as comm_accounting
+from repro.comm import codecs as comm_codecs
+from repro.comm import error_feedback as comm_ef
 
 
 class SampleFedData(NamedTuple):
@@ -178,7 +190,8 @@ def aggregation_weights(counts, batch_size: int, part_mask=None):
 
 def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
                  batch_size: int, with_value: bool = False,
-                 participation: int | None = None, participation_key=None):
+                 participation: int | None = None, participation_key=None,
+                 codec=None, ef=None, codec_key=None):
     """Computes client uploads q_i = Σ_{n∈batch} ∇f(ω;x_n) (and Σ f if asked)
     then the server aggregate ĝ = Σ_i N_i/(B_i·N) q_i  (and F̂ likewise).
 
@@ -188,8 +201,16 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     (this simulation still *computes* every client's q with static shapes and
     zero-masks the rest at the server; a deployment would skip the work).
 
+    With `codec=` each client flattens its q pytree to one (P,) vector and
+    uploads the codec's wire format instead of dense fp32; `ef` is the
+    (I, P) error-feedback residual matrix from the previous round (zeros if
+    None) and the updated residuals come back as ``uploads["ef"]``.
+    Non-participating clients neither upload nor touch their residual.
+
     Returns (grad_est, value_est, uploads) — `uploads` is everything that
-    crossed the client boundary (privacy-surface assertion hook).
+    crossed the client boundary (privacy-surface assertion hook); with a
+    codec that is ``uploads["encoded"]`` (wire format) and
+    ``uploads["upload_nbytes"]`` (exact bytes, repro.comm.accounting).
     """
     if participation is not None and participation < 1:
         raise ValueError(f"participation must be >= 1, got {participation}")
@@ -214,12 +235,30 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
             participation_key = jax.random.fold_in(key, 0x5ca)
         pmask = participation_mask(participation_key, data.num_clients,
                                    participation)
+    enc = new_ef = None
+    nbytes = None
+    if codec is not None:
+        qf, unflatten = comm_codecs.flatten_stacked(q)   # (I, P)
+        if ef is None:
+            ef = jnp.zeros_like(qf)
+        if codec_key is None:
+            codec_key = jax.random.fold_in(key, 0xC0DEC)
+        ckeys = jax.random.split(codec_key, qf.shape[0])
+        active = pmask if pmask is not None else jnp.ones((qf.shape[0],))
+        enc, q_hat, new_ef = jax.vmap(
+            lambda x, r, k, a: comm_ef.ef_roundtrip(codec, x, r, k, a)
+        )(qf, ef, ckeys, active)
+        q = unflatten(q_hat)
+        nbytes = comm_accounting.sample_round_bytes(
+            qf.shape[1], data.num_clients, codec,
+            participation=participation, with_value=with_value)["up"]
     w = aggregation_weights(data.counts, batch_size, pmask)
     grad_est = jax.tree.map(
         lambda u: jnp.tensordot(w, u.astype(jnp.float32), axes=1), q)
     value_est = jnp.dot(w, val)
     uploads = {"q_grad_sums": q, "q_value_sums": val if with_value else None,
-               "participants": pmask}
+               "participants": pmask, "encoded": enc, "ef": new_ef,
+               "upload_nbytes": nbytes}
     return grad_est, value_est, uploads
 
 
@@ -229,7 +268,8 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
 
 
 def feature_round(params, data: FeatureFedData, key, batch_size: int,
-                  head_loss_from_h: Callable, client_h: Callable):
+                  head_loss_from_h: Callable, client_h: Callable,
+                  codec=None, ef=None, codec_key=None):
     """Faithful Alg-3 information flow for f(ω;x) = g0(ω0, Σ_i h_i(ω_i, x_i)):
 
       server picks N^(t)  →  client i computes h_i and broadcasts it  →
@@ -238,6 +278,11 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
       aggregates with 1/B weights (eq. 16).
 
     params: {"w0": head params, "blocks": (I, ...) client blocks}.
+    With `codec=` the q_{f,0,0} head upload and each client's q_{f,0,i}
+    block upload cross the wire compressed, with error-feedback residuals
+    ``ef = {"w0": (P0,), "blocks": (I, Pb)}`` (the step-4 h-exchange stays
+    dense — it feeds gradients, not the aggregate, and is accounted in
+    repro.comm.accounting.feature_round_bytes).
     Returns (grad_est pytree like params, value_est, uploads).
     """
     n = data.total
@@ -264,29 +309,36 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
 
     q0i = jax.vmap(block_grad)(params["blocks"], zb)              # (I, ...)
 
+    enc = new_ef = None
+    nbytes = None
+    if codec is not None:
+        f0, unf0 = comm_codecs.flatten_tree(q00)
+        fb, unfb = comm_codecs.flatten_stacked(q0i)
+        if ef is None:
+            ef = {"w0": jnp.zeros_like(f0), "blocks": jnp.zeros_like(fb)}
+        if codec_key is None:
+            codec_key = jax.random.fold_in(key, 0xC0DEC)
+        k0 = jax.random.fold_in(codec_key, 0)
+        kb = jax.random.split(jax.random.fold_in(codec_key, 1), fb.shape[0])
+        enc0, h0, r0 = comm_ef.ef_roundtrip(codec, f0, ef["w0"], k0)
+        encb, hb, rb = jax.vmap(
+            lambda x, r, k: comm_ef.ef_roundtrip(codec, x, r, k))(
+                fb, ef["blocks"], kb)
+        q00, q0i = unf0(h0), unfb(hb)
+        new_ef = {"w0": r0, "blocks": rb}
+        enc = {"q_head": enc0, "q_blocks": encb}
+        nbytes = comm_accounting.feature_round_bytes(
+            f0.shape[0], [fb.shape[1]] * fb.shape[0], batch_size,
+            h.shape[-1], data.num_clients, codec)["up"]
+
     grad_est = {"w0": q00 / batch_size,
                 "blocks": q0i / batch_size}
     value_est = val / batch_size
-    uploads = {"h_exchange": h, "q_head": q00, "q_blocks": q0i}
+    uploads = {"h_exchange": h, "q_head": q00, "q_blocks": q0i,
+               "encoded": enc, "ef": new_ef, "upload_nbytes": nbytes}
     return grad_est, value_est, uploads
 
 
-def comm_load_per_round(mode: str, d: int, d_blocks: Sequence[int] = (),
-                        batch_size: int = 0, h_dim: int = 0,
-                        num_clients: int = 0, num_constraints: int = 0):
-    """Floats communicated per round (paper's per-round load accounting).
-
-    sample-based (Alg 1/2): each client uploads d (+M·(1+d)); server broadcasts d.
-    feature-based (Alg 3/4): h-exchange B·H·I·(I-1) between clients, block
-    gradients d_i up, broadcast d down.
-    """
-    m = num_constraints
-    if mode == "sample":
-        up = num_clients * (d + m * (1 + d))
-        down = num_clients * d
-        return {"up": up, "down": down, "total": up + down}
-    h_x = batch_size * h_dim * num_clients * (num_clients - 1) * (1 + m)
-    up = sum(d_blocks) * (1 + m) + (d - sum(d_blocks)) * (1 + m) + m * num_clients
-    down = num_clients * d
-    return {"up": up, "down": down, "h_exchange": h_x,
-            "total": up + down + h_x}
+# Fig.-3 float counters: moved to repro.comm.accounting (which adds the
+# byte-level, codec-aware versions); re-exported here for back-compat.
+comm_load_per_round = comm_accounting.comm_load_per_round

@@ -121,7 +121,24 @@ def loop_rounds(step_fn: Callable, state, inputs: RoundInputs):
 class RunResult(NamedTuple):
     params: object
     history: dict             # eval-metric name -> (n_evals,) + per-round arrays
-    final_state: object
+    final_state: object       # full scan carry (incl. any CommCarry EF state)
+
+
+def unwrap_comm(state):
+    """Peel communication-compression carries off a scan state.
+
+    With a codec, drivers wrap their optimizer state in
+    ``repro.comm.error_feedback.CommCarry(opt=..., ef=...)`` so the
+    error-feedback residuals round-trip through the ``lax.scan`` carry as
+    regular pytree state. This walks ``.opt`` links until it reaches the
+    state that owns ``.params`` (no-op for unwrapped states)."""
+    while not hasattr(state, "params") and hasattr(state, "opt"):
+        state = state.opt
+    return state
+
+
+def _default_extract(state):
+    return unwrap_comm(state).params
 
 
 ENGINES = {"scan": scan_rounds, "loop": loop_rounds}
@@ -139,7 +156,7 @@ def chunk_sizes(rounds: int, chunk: int):
 
 def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
                eval_fn: Optional[Callable] = None, eval_every: int = 0,
-               extract_params: Callable = lambda s: s.params,
+               extract_params: Optional[Callable] = None,
                t_start: int = 1, driver: str = "scan") -> RunResult:
     """High-level driver: scan-compile rounds, with optional periodic host
     evaluation between scan chunks.
@@ -151,6 +168,7 @@ def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
     "round_<name>" (with "round_t" = t_start..t_start+K-1).
     """
     engine = ENGINES[driver]
+    extract_params = extract_params or _default_extract
     if rounds <= 0:
         return RunResult(extract_params(state), {"round": jnp.zeros((0,))},
                          state)

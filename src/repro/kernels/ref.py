@@ -34,6 +34,24 @@ def ssca_update_ref(w, buf, grad, rho, gamma, tau, lam):
     return new_w.astype(w.dtype), new_buf
 
 
+def stochastic_quantize_ref(x, bits, qmax: int, chunk: int = 256):
+    """Oracle for the fused quantize-dequantize kernel: per-chunk absmax
+    scales + stochastic rounding from raw uint32 bits. Delegates to the same
+    comm/codecs.py math the codec ref path uses, so codec == kernel exactly.
+
+    x: (P,); bits: uint32, (ceil(P/chunk)·chunk,).
+    Returns (values int8 (C·chunk,), scales fp32 (C,), xhat fp32 (P,)).
+    """
+    from repro.comm.codecs import (chunk_pad, stochastic_round_chunks,
+                                   uniform_from_bits)
+    p = x.shape[0]
+    xc = chunk_pad(x, chunk)
+    u = uniform_from_bits(bits.reshape(xc.shape))
+    q, scales = stochastic_round_chunks(xc, u, qmax)
+    xhat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)[:p]
+    return q.reshape(-1), scales, xhat
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """q: (B,H,Sq,D); k,v: (B,KV,Sk,D); GQA via H % KV == 0. fp32 softmax."""
     b, h, sq, d = q.shape

@@ -119,9 +119,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
-        cost_xla = compiled.cost_analysis()      # raw XLA numbers (while bodies x1)
         hlo = compiled.as_text()
         from repro.roofline import hlo_cost
+        # raw XLA numbers (while bodies x1); list/dict + key drift normalized
+        cost_xla = hlo_cost.xla_cost_analysis(compiled)
         parsed = hlo_cost.analyze(hlo)           # while-aware (see roofline/hlo_cost.py)
         coll = parsed["collectives"]
         coll.setdefault("total", 0.0)

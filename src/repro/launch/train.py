@@ -9,9 +9,17 @@ dispatch via core/rounds.py, with the ρ^t/γ^t schedules threaded as scan
 inputs. ``--driver loop`` keeps the seed's one-dispatch-per-step execution
 for comparison (benchmarks/rounds_bench.py quantifies the gap).
 
+Upload compression (DESIGN.md §10): ``--codec {none,int8,int4,topk}`` runs
+the round's gradient "upload" through a repro.comm codec with an
+error-feedback residual carried in the scan state (CommCarry) — in the
+clients-as-data-shards picture this compresses exactly what Algorithm 1's
+clients put on the wire, and the logged ``upload_bytes`` is the per-round
+wire cost from repro.comm.accounting.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
-          [--driver scan|loop]
+          [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
+          [--codec-impl pallas]
 """
 from __future__ import annotations
 
@@ -23,10 +31,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import (CommCarry, ef_init, ef_roundtrip, flatten_tree,
+                        make_codec, tree_flat_dim, with_comm_carry)
 from repro.configs import FLConfig, get_config
 from repro.core import optimizer, rounds
 from repro.launch import mesh as mesh_lib
 from repro.models import get_model
+
+
+def _ssca_update(state, loss, grads, fl: FLConfig, rho_t, gamma_t,
+                 constrained: bool):
+    """Shared update + metrics of the (constrained) train step — single
+    definition so the codec path below cannot drift from the dense one."""
+    if constrained:
+        new = optimizer.ssca_constrained_step(state, grads, loss, fl,
+                                              rho_t=rho_t, gamma_t=gamma_t)
+        return new, {"loss": loss, "nu": new.nu, "slack": new.slack,
+                     "l2": sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                               for x in jax.tree.leaves(new.params))}
+    new = optimizer.ssca_step(state, grads, fl, rho_t=rho_t, gamma_t=gamma_t)
+    return new, {"loss": loss, "t": state.t}
 
 
 def make_train_step(model, cfg, fl: FLConfig):
@@ -37,8 +61,8 @@ def make_train_step(model, cfg, fl: FLConfig):
 
     def train_step(state, batch, rho_t=None, gamma_t=None):
         loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
-        new = optimizer.ssca_step(state, grads, fl, rho_t=rho_t, gamma_t=gamma_t)
-        return new, {"loss": loss, "t": state.t}
+        return _ssca_update(state, loss, grads, fl, rho_t, gamma_t,
+                            constrained=False)
 
     return train_step
 
@@ -48,11 +72,8 @@ def make_constrained_train_step(model, cfg, fl: FLConfig):
 
     def train_step(state, batch, rho_t=None, gamma_t=None):
         loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch, cfg)
-        new = optimizer.ssca_constrained_step(state, grads, loss, fl,
-                                              rho_t=rho_t, gamma_t=gamma_t)
-        return new, {"loss": loss, "nu": new.nu, "slack": new.slack,
-                     "l2": sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                               for x in jax.tree.leaves(new.params))}
+        return _ssca_update(state, loss, grads, fl, rho_t, gamma_t,
+                            constrained=True)
 
     return train_step
 
@@ -87,9 +108,11 @@ def jit_train_step(model, cfg, fl, mesh, batch_like, constrained=False):
 
 
 def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
-                      constrained: bool = False):
+                      constrained: bool = False, codec=None):
     """Fuses per-round data selection into the train step so the whole round
-    chain is scannable: step(state, RoundInputs) -> (state, metrics)."""
+    chain is scannable: step(state, RoundInputs) -> (state, metrics). With a
+    codec, the gradient is compressed through an error-feedback roundtrip
+    before the SSCA update and the state is a CommCarry."""
     from repro.data.synthetic import sample_window
 
     train_step = (make_constrained_train_step if constrained
@@ -99,14 +122,30 @@ def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
         data = sample_window(tokens, inp.key, batch, seq)
         return train_step(state, data, rho_t=inp.rho, gamma_t=inp.gamma)
 
-    return step
+    if codec is None:
+        return step
+
+    def codec_body(state, inp, ef):
+        data = sample_window(tokens, inp.key, batch, seq)
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, data,
+                                                        cfg)
+        gf, unflatten = flatten_tree(grads)
+        _, g_hat, new_ef = ef_roundtrip(
+            codec, gf, ef, jax.random.fold_in(inp.key, 0xC0DEC))
+        new, metrics = _ssca_update(state, loss, unflatten(g_hat), fl,
+                                    inp.rho, inp.gamma, constrained)
+        metrics["upload_bytes"] = float(codec.nbytes(gf.shape[0]))
+        return new, new_ef, metrics
+
+    return with_comm_carry(codec, codec_body)
 
 
 def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                smoke: bool = False, constrained: bool = False,
                fl: Optional[FLConfig] = None, log_every: int = 10,
                ckpt_path: Optional[str] = None, seed: int = 0,
-               driver: str = "scan"):
+               driver: str = "scan", codec: Optional[str] = None,
+               topk_frac: float = 0.01, codec_impl: str = "ref"):
     from repro.data.synthetic import token_dataset
 
     cfg = get_config(arch)
@@ -119,10 +158,14 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
     params = model.init(key, cfg)
     state = (optimizer.ssca_constrained_init(params) if constrained
              else optimizer.ssca_init(params))
+    codec_obj = make_codec(codec, topk_frac=topk_frac, impl=codec_impl)
+    if codec_obj is not None:
+        state = CommCarry(opt=state, ef=ef_init(tree_flat_dim(params)))
 
     toks = token_dataset(jax.random.fold_in(key, 1), cfg.vocab_size,
                          n_tokens=max(200_000, batch * (seq + 1) * 4))
-    step_fn = make_scanned_step(model, cfg, fl, toks, batch, seq, constrained)
+    step_fn = make_scanned_step(model, cfg, fl, toks, batch, seq, constrained,
+                                codec=codec_obj)
     engine = rounds.ENGINES[driver]
     sizes = rounds.chunk_sizes(steps, log_every)
 
@@ -143,7 +186,8 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                        for k, v in m.items()), flush=True)
     if ckpt_path:
         from repro.checkpoint import save_checkpoint
-        save_checkpoint(ckpt_path, state.params, step=steps)
+        save_checkpoint(ckpt_path, rounds.unwrap_comm(state).params,
+                        step=steps)
     return state, logs
 
 
@@ -156,11 +200,18 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--constrained", action="store_true")
     ap.add_argument("--driver", choices=("scan", "loop"), default="scan")
+    ap.add_argument("--codec", choices=("none", "int8", "int4", "topk"),
+                    default="none")
+    ap.add_argument("--topk-frac", type=float, default=0.01)
+    ap.add_argument("--codec-impl", choices=("ref", "pallas"), default="ref",
+                    help="quantizer backend: pure-jnp ref, or the fused "
+                         "Pallas quantize-dequantize kernel (TPU)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     train_loop(args.arch, args.steps, args.batch, args.seq, smoke=args.smoke,
                constrained=args.constrained, ckpt_path=args.ckpt,
-               driver=args.driver)
+               driver=args.driver, codec=args.codec,
+               topk_frac=args.topk_frac, codec_impl=args.codec_impl)
 
 
 if __name__ == "__main__":

@@ -225,6 +225,23 @@ def _instr_bytes(ins: Instr, defs: Dict[str, str], comps, fusion_traffic) -> flo
     return b
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of per-device dicts, newer jax a
+    plain dict; keys like "flops"/"bytes accessed" have also drifted between
+    releases. Returns a (possibly empty) dict — callers must .get() keys and
+    fall back gracefully when one is absent.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze(hlo: str) -> dict:
     comps = parse_computations(hlo)
     entry = next((c for c in comps.values() if c.is_entry), None)

@@ -1,0 +1,56 @@
+"""Hypothesis property tests for the compression codecs (skipped without the
+``dev`` extra, like the other property suites): stochastic-rounding
+quantizers are unbiased for arbitrary inputs, error feedback conserves mass
+for every codec, and top-k with frac=1 is lossless at any length."""
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.comm import codecs, error_feedback
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 300),
+       st.sampled_from([4, 8]), st.floats(1e-3, 1e3))
+def test_quantizer_unbiased(seed, p, bits, scale):
+    """E[decode(encode(x))] == x within a CLT band, for any length, bit
+    width, and input magnitude (per-chunk absmax scaling never clips)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (p,)) * scale
+    sq = codecs.StochasticQuantizer(bits=bits, chunk=64)
+    m = 1500
+    keys = jax.random.split(jax.random.fold_in(key, 1), m)
+    xh = jax.vmap(lambda k: sq.roundtrip(x, k)[1])(keys)
+    bias = np.abs(np.asarray(jnp.mean(xh, axis=0) - x))
+    max_scale = float(jnp.max(sq.encode(x, keys[0]).scales))
+    assert bias.max() < max(6 * max_scale * 0.5 / np.sqrt(m), 1e-7)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 200),
+       st.floats(0.01, 1.0))
+def test_ef_conservation_any_codec(seed, p, frac):
+    """x_hat + r' == x + r: error feedback never loses mass, so whatever
+    top-k drops this round is re-offered next round (k -> P consistency)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (p,))
+    r = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    for codec in (codecs.TopK(frac=frac),
+                  codecs.StochasticQuantizer(bits=8, chunk=32)):
+        _, xhat, r2 = error_feedback.ef_roundtrip(
+            codec, x, r, jax.random.fold_in(key, 2))
+        np.testing.assert_allclose(np.asarray(xhat + r2), np.asarray(x + r),
+                                   atol=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 500))
+def test_topk_full_fraction_lossless(seed, p):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (p,))
+    _, xhat = codecs.TopK(frac=1.0).roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(xhat), np.asarray(x))

@@ -62,8 +62,11 @@ def test_hlo_cost_matches_xla_on_loop_free_module():
     got = hlo_cost.analyze(compiled.as_text())
     want_flops = 2 * 64 * 128 * 256 + 2 * 64 * 256 * 32
     assert abs(got["flops"] - want_flops) / want_flops < 1e-6
-    xla_bytes = compiled.cost_analysis().get("bytes accessed")
-    assert abs(got["bytes"] - xla_bytes) / xla_bytes < 0.2
+    # xla_cost_analysis normalizes the list/dict return drift across jax
+    # versions; "bytes accessed" may be absent entirely on some backends.
+    xla_bytes = hlo_cost.xla_cost_analysis(compiled).get("bytes accessed")
+    if xla_bytes:
+        assert abs(got["bytes"] - xla_bytes) / xla_bytes < 0.2
 
 
 def test_hlo_cost_scan_multiplier():

@@ -82,3 +82,45 @@ def test_ops_dispatch_ref_on_cpu():
     sc = jnp.zeros((64,))
     np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, sc)),
                                np.asarray(ref.rmsnorm_ref(x, sc)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [17, 1000, 4096, 70000])
+@pytest.mark.parametrize("qmax", [127, 7])
+def test_quantize_kernel_matches_ref(n, qmax):
+    """Fused quantize-dequantize kernel == the comm/codecs.py math exactly
+    (same PRNG bits in on the portable path -> same wire values out)."""
+    from repro.kernels.quantize import stochastic_quantize_pallas
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (n,)) * 3.0
+    chunk = 256
+    num_chunks = -(-n // chunk)
+    bits = jax.random.bits(jax.random.fold_in(key, 1),
+                           (num_chunks * chunk,), jnp.uint32)
+    v_r, s_r, xh_r = ref.stochastic_quantize_ref(x, bits, qmax, chunk)
+    v_p, s_p, xh_p = stochastic_quantize_pallas(x, qmax, chunk, bits=bits,
+                                                block_rows=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(xh_p), np.asarray(xh_r))
+    # per-chunk absmax scales are deterministic and exact
+    pad = num_chunks * chunk - n
+    xc = np.pad(np.asarray(x), (0, pad)).reshape(num_chunks, chunk)
+    np.testing.assert_allclose(np.asarray(s_p),
+                               np.abs(xc).max(axis=1) / qmax, rtol=1e-6)
+
+
+def test_quantize_kernel_through_codec_pallas_impl():
+    """The codec's impl="pallas" path (interpret mode) is bit-identical to
+    impl="ref" — both consume the same jax.random bits."""
+    from repro.comm.codecs import StochasticQuantizer
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (3000,))
+    r = StochasticQuantizer(bits=8, chunk=256, impl="ref")
+    p = StochasticQuantizer(bits=8, chunk=256, impl="pallas", interpret=True)
+    enc_r, xh_r = r.roundtrip(x, jax.random.fold_in(key, 1))
+    enc_p, xh_p = p.roundtrip(x, jax.random.fold_in(key, 1))
+    np.testing.assert_array_equal(np.asarray(enc_p.values),
+                                  np.asarray(enc_r.values))
+    np.testing.assert_array_equal(np.asarray(enc_p.scales),
+                                  np.asarray(enc_r.scales))
+    np.testing.assert_array_equal(np.asarray(xh_p), np.asarray(xh_r))
