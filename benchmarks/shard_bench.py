@@ -1,0 +1,164 @@
+"""Device-sharded vs local client-execution throughput (DESIGN.md §11).
+
+Runs the same Algorithm-1 round chain (I clients, quickstart-shaped MLP,
+scan-compiled K-round dispatch) under ``topology=local`` (vmap over all
+clients on one device — the reference engine) and ``topology=sharded``
+(clients over an 8-virtual-device mesh via shard_map, eq.-(9) aggregation as
+a weighted psum), and reports rounds/second for each. Prints
+``name,us_per_call,derived`` CSV rows like the other benches and writes the
+result to JSON (``BENCH_shard.json`` in CI).
+
+Claim checks:
+  * trajectory equality (always enforced): the sharded per-round loss
+    trajectory matches local at atol 1e-5 — the collective path computes the
+    same mathematics, only reassociated.
+  * speedup >= 1.5x (enforced when the host has >= 2 cores per device):
+    distributing I/D clients per device beats single-device vmap once real
+    parallel hardware exists. The single-device baseline is not serial —
+    XLA's intra-op threading spreads it over every core — so beating it
+    1.5x needs cores beyond what one device program saturates; on hosts
+    without that headroom (the 2-vCPU CI runners, or cpu_count == devices)
+    the measured speedup is still recorded in the JSON and the claim is
+    marked "gated" instead of asserted (same best-effort stance as
+    rounds_bench's timing claim on shared runners).
+
+The virtual-device count is forced in-process (XLA_FLAGS must be set before
+jax initializes), so this bench is runnable anywhere:
+
+Usage:  PYTHONPATH=src python -m benchmarks.shard_bench [--smoke]
+            [--clients 64] [--devices 8] [--rounds 120]
+            [--json BENCH_shard.json]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _force_devices(n: int):
+    if "jax" in sys.modules:
+        raise RuntimeError("benchmarks.shard_bench must set "
+                           "--xla_force_host_platform_device_count before "
+                           "jax is imported; run it as the entry point")
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={n}")
+
+
+def shard_tradeoff(rounds: int = 120, clients: int = 64, devices: int = 8,
+                   per_client: int = 200, batch: int = 100, repeats: int = 3,
+                   json_path: str = None):
+    import jax
+    import numpy as np
+
+    from repro.comm.accounting import psum_axis_bytes
+    from repro.comm.codecs import tree_flat_dim
+    from repro.configs.base import FLConfig
+    from repro.core import algorithms, fed, optimizer
+    from repro.core import rounds as rounds_lib
+    from repro.core.topology import ShardedTopology
+    from repro.data.synthetic import classification_dataset
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import mlp
+
+    assert len(jax.devices()) >= devices, (
+        f"{devices} devices requested, {len(jax.devices())} present")
+    key = jax.random.PRNGKey(0)
+    (z, y, _), _ = classification_dataset(key, n=clients * per_client,
+                                          num_features=784, num_classes=10,
+                                          test_n=100, noise=4.0)
+    data = fed.partition_samples(z, y, num_clients=clients)
+    params0 = mlp.init(jax.random.PRNGKey(1), 784, 64, 10)
+    fl = FLConfig(num_clients=clients, batch_size=batch, a1=0.3, a2=0.3,
+                  alpha_rho=0.1, alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
+    topo = ShardedTopology(make_client_mesh(devices))
+    dim = tree_flat_dim(params0)
+
+    inputs = rounds_lib.make_inputs(fl, 1, rounds, jax.random.PRNGKey(2))
+    state0 = optimizer.ssca_init(params0)
+
+    def run(topology):
+        step = algorithms.make_algorithm1_step(mlp.per_sample_loss, data, fl,
+                                               topology=topology)
+        s, m = rounds_lib.scan_rounds(step, state0, inputs)   # compile+warm
+        jax.block_until_ready(s.params)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            s, m = rounds_lib.scan_rounds(step, state0, inputs)
+            jax.block_until_ready(s.params)
+            best = min(best, time.perf_counter() - t0)
+        return s, m, best
+
+    s_local, m_local, t_local = run(None)
+    s_shard, m_shard, t_shard = run(topo)
+
+    traj_diff = float(np.max(np.abs(np.asarray(m_shard["loss_est"])
+                                    - np.asarray(m_local["loss_est"]))))
+    speedup = t_local / t_shard
+    cpus = os.cpu_count() or 1
+    # >= 2 cores per device shard: the local baseline's intra-op threads
+    # already use every core, so device parallelism only has real headroom
+    # when cores clearly exceed what one device program saturates
+    claim_active = cpus >= 2 * devices
+    result = {
+        "clients": clients, "devices": devices, "cpu_count": cpus,
+        "rounds": rounds, "batch": batch, "param_dim": dim,
+        "local_rounds_per_s": rounds / t_local,
+        "sharded_rounds_per_s": rounds / t_shard,
+        "speedup": speedup,
+        "traj_max_abs_diff": traj_diff,
+        "axis_bytes_per_round": psum_axis_bytes(dim, devices),
+        "upload_bytes_per_round": float(m_local["upload_bytes"][0]),
+        "claim": ("pass" if claim_active and speedup >= 1.5 else
+                  "fail" if claim_active else "gated"),
+        "claim_note": (None if claim_active else
+                       f"{cpus} cores < 2x{devices} devices: single-device "
+                       "intra-op threading already saturates the host, no "
+                       "parallel headroom to claim-check against"),
+    }
+
+    for name, t in (("local", t_local), ("sharded", t_shard)):
+        print(f"shard_topology_{name},{1e6 * t / rounds:.1f},"
+              f"rounds_per_s={rounds / t:.1f}", flush=True)
+    print(f"shard_topology_speedup,0,sharded_over_local={speedup:.2f}x,"
+          f"claim={result['claim']},traj_max_abs_diff={traj_diff:.2e}",
+          flush=True)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"# wrote {json_path}", flush=True)
+
+    # trajectory equality is the hard invariant on every host
+    np.testing.assert_allclose(np.asarray(m_shard["loss_est"]),
+                               np.asarray(m_local["loss_est"]), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_shard.params),
+                    jax.tree.leaves(s_local.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    if claim_active:
+        assert speedup >= 1.5, (
+            f"sharded topology {rounds / t_shard:.1f} rps is only "
+            f"{speedup:.2f}x local {rounds / t_local:.1f} rps "
+            f"(>= 1.5x required on a {cpus}-core host with {devices} "
+            "devices)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (~1 min CPU)")
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    _force_devices(args.devices)
+    rounds = args.rounds or (40 if args.smoke else 120)
+    shard_tradeoff(rounds=rounds, clients=args.clients, devices=args.devices,
+                   json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

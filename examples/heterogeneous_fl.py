@@ -15,7 +15,13 @@ emphasizes:
     aggregation reweighted by I/S to stay unbiased;
   * communication budget: dense fp32 uploads vs int8 stochastic quantization
     (unbiased) vs top-k sparsification with error feedback (DESIGN.md §10),
-    with exact per-round upload bytes from repro.comm.accounting.
+    with exact per-round upload bytes from repro.comm.accounting;
+  * client topology (DESIGN.md §11): --topologies local,sharded sweeps the
+    client-execution engine, so the non-IID Dirichlet partitions (ragged
+    N_i, masked batches) run both under single-device vmap and distributed
+    over the host mesh with the N_i/(B_i·N) aggregation as a weighted psum
+    (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to actually
+    spread the clients; a 1-device mesh still runs the collective path).
 
 All scenario cells run Algorithm 1 through the scan-compiled round driver
 (one XLA dispatch per eval chunk) and print final cost/accuracy/bytes.
@@ -27,8 +33,15 @@ import jax
 from repro.comm import make_codec
 from repro.configs.base import FLConfig
 from repro.core import algorithms, fed
+from repro.core.topology import sharded_for
 from repro.data.synthetic import classification_dataset
 from repro.models import mlp
+
+
+def _make_topology(name: str, clients: int):
+    """"local" -> None (the default engine); "sharded" -> a ShardedTopology
+    over the most host devices that divide the client count."""
+    return None if name == "local" else sharded_for(clients)
 
 
 def main():
@@ -40,11 +53,14 @@ def main():
     ap.add_argument("--codecs", default="none,int8,topk",
                     help="comma-separated codec axis "
                          "(none|identity|int8|int4|topk|topk8)")
+    ap.add_argument("--topologies", default="local,sharded",
+                    help="comma-separated topology axis (local|sharded)")
     ap.add_argument("--topk-frac", type=float, default=0.05)
     args = ap.parse_args()
     if args.rounds < 1 or args.participation < 1:
         ap.error("--rounds and --participation must be >= 1")
     codec_names = [c.strip() for c in args.codecs.split(",") if c.strip()]
+    topo_names = [t.strip() for t in args.topologies.split(",") if t.strip()]
 
     key = jax.random.PRNGKey(0)
     print(f"building synthetic dataset (N={args.n}, P=784, L=10) ...")
@@ -67,24 +83,30 @@ def main():
         print(f"\nDirichlet(alpha={alpha}) [{tag}]  N_i = {counts}")
         for part in (None, args.participation):
             for cname in codec_names:
-                codec = make_codec(cname, topk_frac=args.topk_frac)
-                label = (f"alpha={alpha:<5g} S={part or args.clients}/"
-                         f"{args.clients} codec={cname:<5s}")
-                r = algorithms.algorithm1(
-                    mlp.per_sample_loss, params0, data, fl, args.rounds,
-                    jax.random.PRNGKey(2), eval_fn=eval_fn,
-                    eval_every=args.rounds, participation=part, codec=codec)
-                cost = float(r.history["cost"][-1])
-                acc = float(r.history["acc"][-1])
-                up_mb = float(r.history["round_upload_bytes"].sum()) / 1e6
-                scenarios.append((label, cost, acc, up_mb))
-                print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}  "
-                      f"upload={up_mb:.1f}MB")
+                for tname in topo_names:
+                    topo = _make_topology(tname, args.clients)
+                    shards = getattr(topo, "num_shards", 1)
+                    codec = make_codec(cname, topk_frac=args.topk_frac)
+                    label = (f"alpha={alpha:<5g} S={part or args.clients}/"
+                             f"{args.clients} codec={cname:<5s} "
+                             f"topo={tname}x{shards}")
+                    r = algorithms.algorithm1(
+                        mlp.per_sample_loss, params0, data, fl, args.rounds,
+                        jax.random.PRNGKey(2), eval_fn=eval_fn,
+                        eval_every=args.rounds, participation=part,
+                        codec=codec, topology=topo)
+                    cost = float(r.history["cost"][-1])
+                    acc = float(r.history["acc"][-1])
+                    up_mb = float(r.history["round_upload_bytes"].sum()) / 1e6
+                    ax_mb = float(r.history["round_axis_bytes"].sum()) / 1e6
+                    scenarios.append((label, cost, acc, up_mb, ax_mb))
+                    print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}  "
+                          f"upload={up_mb:.1f}MB  axis={ax_mb:.1f}MB")
 
     print("\nscenario summary (Algorithm 1, scan driver):")
-    for label, cost, acc, up_mb in scenarios:
+    for label, cost, acc, up_mb, ax_mb in scenarios:
         print(f"  {label}  cost={cost:.4f}  acc={acc:.4f}  "
-              f"upload={up_mb:.1f}MB")
+              f"upload={up_mb:.1f}MB  axis={ax_mb:.1f}MB")
 
 
 if __name__ == "__main__":

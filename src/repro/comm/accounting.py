@@ -42,6 +42,24 @@ def sample_round_bytes(d: int, num_clients: int, codec=None,
     return {"up": up, "down": down, "total": up + down}
 
 
+def psum_axis_bytes(d: int, num_shards: int, with_value: bool = False,
+                    num_streams: int = 1) -> int:
+    """Bytes crossing the client-sharding mesh axis per round when the
+    N_i/(B_i·N) aggregation of eq. (9) is realized as a `lax.psum` over D
+    client shards (core/topology.py's ShardedTopology).
+
+    Each shard contributes one pre-weighted d-dim fp32 partial sum (+ the
+    fp32 value partial for the constrained variants); a ring all-reduce
+    moves 2·(D−1)/D · payload per device, i.e. 2·(D−1)·payload over the
+    whole axis. D = 1 costs nothing — the local topology is recovered.
+    ``num_streams`` counts independent psums per round (e.g. Algorithm 2
+    general runs separate objective and constraint aggregations)."""
+    if num_shards <= 1:
+        return 0
+    payload = F32_BYTES * (d + (1 if with_value else 0))
+    return 2 * (num_shards - 1) * payload * num_streams
+
+
 def feature_round_bytes(d_head: int, d_blocks: Sequence[int], batch_size: int,
                         h_dim: int, num_clients: int,
                         codec=None) -> Dict[str, int]:

@@ -6,8 +6,10 @@
   optimizer  — SSCA as a composable (state, grad) -> state optimizer
   fed        — client containers, per-round uploads, aggregation, comm loads
   rounds     — scan-compiled multi-round driver (one dispatch per K rounds)
+  topology   — WHERE clients execute: local vmap vs device-sharded shard_map
   algorithms — faithful Algorithm 1-4 drivers
   baselines  — FedSGD / FedAvg / PR-SGD / SGD-m comparison algorithms
+  tree       — shared pytree arithmetic helpers (axpy/dot/l2sq/zeros)
 """
 from repro.core import (algorithms, baselines, fed, optimizer, rounds,  # noqa: F401
-                        schedules, solvers, surrogate)
+                        schedules, solvers, surrogate, topology, tree)

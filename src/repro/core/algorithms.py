@@ -17,6 +17,15 @@ ride through the scan carry in a ``CommCarry`` wrapper, and each round's
 metrics gain ``upload_bytes`` — the exact bytes-on-wire of that round's
 uplink (repro.comm.accounting), so history["round_upload_bytes"] is the
 Fig.-3 x-axis measured, not asserted.
+
+The sample-based drivers also take ``topology=`` (core/topology.py,
+DESIGN.md §11): `LocalTopology` (default) vmaps every client on one device;
+`ShardedTopology` distributes clients over the mesh's client axes via
+shard_map with the q-aggregation as a weighted psum — same trajectories up
+to float reassociation, one scan dispatch spanning D devices. Under a
+sharded topology the metrics additionally carry ``axis_bytes``, the
+per-round bytes the aggregation psum moves over the client mesh axis
+(repro.comm.accounting.psum_axis_bytes).
 """
 from __future__ import annotations
 
@@ -36,16 +45,31 @@ from repro.core.rounds import RunResult  # re-exported (public API since seed)
 
 
 def _run(step_fn, state, key, num_rounds: int, eval_fn: Optional[Callable],
-         eval_every: int, extract_params=None, fl=None, driver: str = "scan"):
+         eval_every: int, extract_params=None, fl=None, driver: str = "scan",
+         topology=None):
     """Back-compat driver shim shared with baselines/local_updates: step_fn
     has the rounds.py signature step(state, RoundInputs-slice) -> (state,
     metrics). fl is only needed for the schedule inputs; steps that ignore
     rho/gamma (SGD baselines) may pass fl=None. extract_params=None uses the
-    CommCarry-aware default (rounds.unwrap_comm)."""
+    CommCarry-aware default (rounds.unwrap_comm). topology is forwarded so
+    run_rounds can pre-place per-client carry state on the mesh."""
     fl = fl if fl is not None else _NULL_SCHED
     return rounds_lib.run_rounds(step_fn, state, fl, key, num_rounds,
                              eval_fn=eval_fn, eval_every=eval_every,
-                             extract_params=extract_params, driver=driver)
+                             extract_params=extract_params, driver=driver,
+                             topology=topology)
+
+
+def _axis_bytes_metric(topology, grad_est, with_value: bool = False,
+                       num_streams: int = 1):
+    """Static per-round bytes over the client mesh axis (0.0 for local):
+    the psum realization of the eq.-(9) aggregation moves pre-weighted
+    partial sums, accounted once per driver here. grad_est only supplies
+    the (trace-time static) flat dimension."""
+    shards = getattr(topology, "num_shards", 1) if topology is not None else 1
+    return float(comm_accounting.psum_axis_bytes(
+        comm_codecs.tree_flat_dim(grad_est), shards, with_value=with_value,
+        num_streams=num_streams))
 
 
 def _sample_upload_bytes(uploads, grad_est, data, participation,
@@ -89,22 +113,26 @@ _NULL_SCHED = _NullSched()
 
 
 def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
-                         participation: Optional[int] = None, codec=None):
+                         participation: Optional[int] = None, codec=None,
+                         topology=None):
     """One full Algorithm-1 round as a pure (state, RoundInputs) step —
     batch selection, uploads (optionally codec-compressed with error
     feedback), aggregation, surrogate recursion, update — suitable for
     lax.scan (rounds.scan_rounds) or per-round dispatch. With a codec the
-    state is a CommCarry(opt=SSCAState, ef=(I, P) residuals)."""
+    state is a CommCarry(opt=SSCAState, ef=(I, P) residuals). topology
+    selects the client-execution engine (DESIGN.md §11)."""
 
     def body(state, inp, ef):
         grad_est, val_est, up = fed.sample_round(
             per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            participation=participation, codec=codec, ef=ef)
+            participation=participation, codec=codec, ef=ef,
+            topology=topology)
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est,
                    "upload_bytes": _sample_upload_bytes(
-                       up, grad_est, data, participation)}
+                       up, grad_est, data, participation),
+                   "axis_bytes": _axis_bytes_metric(topology, grad_est)}
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -113,13 +141,13 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
 def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan", codec=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None) -> RunResult:
     step = make_algorithm1_step(per_sample_loss, data, fl, participation,
-                                codec)
+                                codec, topology)
     state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
                               lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver)
+                fl=fl, driver=driver, topology=topology)
 
 
 # ---------------------------------------------------------------------------
@@ -128,16 +156,20 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
 
 
 def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
-                         participation: Optional[int] = None, codec=None):
+                         participation: Optional[int] = None, codec=None,
+                         topology=None):
     def body(state, inp, ef):
         grad_est, val_est, up = fed.sample_round(
             per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            with_value=True, participation=participation, codec=codec, ef=ef)
+            with_value=True, participation=participation, codec=codec, ef=ef,
+            topology=topology)
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
                    "upload_bytes": _sample_upload_bytes(
-                       up, grad_est, data, participation, with_value=True)}
+                       up, grad_est, data, participation, with_value=True),
+                   "axis_bytes": _axis_bytes_metric(topology, grad_est,
+                                                    with_value=True)}
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -146,22 +178,24 @@ def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
 def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan", codec=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None) -> RunResult:
     step = make_algorithm2_step(per_sample_loss, data, fl, participation,
-                                codec)
+                                codec, topology)
     state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
                               lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver)
+                fl=fl, driver=driver, topology=topology)
 
 
 def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                        rounds: int, key, eval_fn=None, eval_every: int = 10,
                        participation: Optional[int] = None,
-                       driver: str = "scan", codec=None) -> RunResult:
+                       driver: str = "scan", codec=None,
+                       topology=None) -> RunResult:
     """Full Algorithm 2: sampled nonconvex objective AND constraint. With a
     codec the objective and constraint q-uploads carry separate EF
-    residuals (ef = {"obj": (I, P), "cons": (I, P)})."""
+    residuals (ef = {"obj": (I, P), "cons": (I, P)}); under a sharded
+    topology both aggregations psum over the client axes (two streams)."""
     def body(state, inp, ef):
         ef = ef if ef is not None else {"obj": None, "cons": None}
         k1, k2 = jax.random.split(inp.key)
@@ -171,19 +205,22 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
         og, _, uo = fed.sample_round(obj_loss, state.params, data, k1,
                                      fl.batch_size, participation=participation,
                                      participation_key=pk, codec=codec,
-                                     ef=ef["obj"])
+                                     ef=ef["obj"], topology=topology)
         cg, cv, uc = fed.sample_round(cons_loss, state.params, data, k2,
                                       fl.batch_size, with_value=True,
                                       participation=participation,
                                       participation_key=pk, codec=codec,
-                                      ef=ef["cons"])
+                                      ef=ef["cons"], topology=topology)
         new = optimizer.ssca_general_constrained_step(
             state, og, cg, cv, fl, rho_t=inp.rho, gamma_t=inp.gamma)
         bts = (_sample_upload_bytes(uo, og, data, participation)
                + _sample_upload_bytes(uc, cg, data, participation,
                                       with_value=True))
         metrics = {"cons_est": cv, "nu": new.nu, "slack": new.slack,
-                   "upload_bytes": bts}
+                   "upload_bytes": bts,
+                   "axis_bytes": (_axis_bytes_metric(topology, og)
+                                  + _axis_bytes_metric(topology, cg,
+                                                       with_value=True))}
         return new, {"obj": uo["ef"], "cons": uc["ef"]}, metrics
 
     step = with_comm_carry(codec, body)
@@ -192,7 +229,7 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
         lambda: {"obj": _sample_ef0(params0, data.num_clients),
                  "cons": _sample_ef0(params0, data.num_clients)})
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver)
+                fl=fl, driver=driver, topology=topology)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,11 @@ average Σ w_i(ω + Δ̂_i) = ω + Σ w_i Δ̂_i since Σ w_i = 1), feature-base
 compresses the same q-uploads as Algorithm 3 via ``fed.feature_round``.
 Error-feedback residuals ride the scan carry in a CommCarry, exactly as in
 core/algorithms.py.
+
+``sample_sgd`` also takes ``topology=`` (core/topology.py): its per-client
+local-step loop + delta upload + N_i/N weighted averaging run through the
+same client-execution engine as the SSCA drivers, so the baseline comparison
+stays apples-to-apples on a sharded mesh too.
 """
 from __future__ import annotations
 
@@ -28,11 +33,12 @@ from repro.comm import codecs as comm_codecs
 from repro.comm import error_feedback as comm_ef
 from repro.comm.error_feedback import with_comm_carry
 from repro.core import fed
+from repro.core import topology as topology_lib
 from repro.core.algorithms import (RunResult, _feature_ef0,
                                    _feature_upload_bytes, _run,
                                    _wrap_codec_state)
 from repro.core.fed import FeatureFedData, SampleFedData
-from repro.core.surrogate import tree_axpy, tree_zeros_like
+from repro.core.tree import tree_l2sq, tree_zeros_like
 
 
 class SGDConfig(NamedTuple):
@@ -62,19 +68,24 @@ class SGDmState(NamedTuple):
 
 def _reg_grad(per_sample_loss, lam):
     def f(p, z, y):
-        return jnp.mean(per_sample_loss(p, z, y)) + lam * sum(
-            jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+        return jnp.mean(per_sample_loss(p, z, y)) + lam * tree_l2sq(p)
     return jax.grad(f)
 
 
 def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               momentum: bool = False, codec=None) -> RunResult:
+               momentum: bool = False, codec=None, topology=None) -> RunResult:
     """E local (momentum-)SGD steps per client per round + weighted averaging.
-    With a codec, each client's model delta is the compressed upload."""
+    Each client's upload is its model delta Δ_i = ω_i^local − ω (compressed
+    when a codec is given); the server applies ω ← ω + Σ_i (N_i/N) Δ̂_i,
+    which equals weighted model averaging because Σ_i w_i = 1. The
+    client-local steps + delta uploads + weighted sum run through the
+    topology engine (core/topology.py), so ``topology=sharded`` distributes
+    the E local steps of each client over the mesh like the SSCA drivers."""
     grad_fn = _reg_grad(per_sample_loss, cfg.l2_lambda)
+    topo = topology if topology is not None else topology_lib.LOCAL
     w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
-    dim = sum(l.size for l in jax.tree.leaves(params0))
+    dim = comm_codecs.tree_flat_dim(params0)
     up_bytes = float(comm_accounting.sample_round_bytes(
         dim, data.num_clients, codec)["up"])
 
@@ -98,30 +109,28 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
     def body(state, inp, ef):
         lr = cfg.lr_a if momentum else _lr(cfg, state.t)
         keys = jax.random.split(inp.key, data.num_clients)
-        locals_, _ = jax.vmap(
-            lambda f_, l_, c_, k_: local(state.params, f_, l_, c_, k_, lr)
-        )(data.features, data.labels, data.counts, keys)
-        new_ef = None
-        if codec is not None:
-            deltas = jax.tree.map(lambda u, p: u - p[None], locals_,
-                                  state.params)
-            df, unflatten = comm_codecs.flatten_stacked(deltas)
-            ckeys = jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
-                                     df.shape[0])
-            _, d_hat, new_ef = jax.vmap(
-                lambda x, r, k_: comm_ef.ef_roundtrip(codec, x, r, k_)
-            )(df, ef, ckeys)
-            locals_ = jax.tree.map(lambda d, p: d + p[None], unflatten(d_hat),
-                                   state.params)
-        params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
+
+        def client_fn(f_, l_, c_, k_):
+            p_local, _ = local(state.params, f_, l_, c_, k_, lr)
+            delta = jax.tree.map(lambda u, p: u - p, p_local, state.params)
+            return delta, jnp.zeros((), jnp.float32)
+
+        ckeys = (jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
+                                  data.num_clients)
+                 if codec is not None else None)
+        s = topo.weighted_sum(client_fn,
+                              (data.features, data.labels, data.counts, keys),
+                              w, codec=codec, ef=ef, codec_keys=ckeys)
+        params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                              state.params, s.weighted)
         new = SGDState(params=params, t=state.t + 1)
-        return new, new_ef, {"upload_bytes": up_bytes}
+        return new, s.ef, {"upload_bytes": up_bytes}
 
     state = _wrap_codec_state(
         SGDState(params=params0, t=jnp.ones((), jnp.int32)), codec,
         lambda: comm_ef.ef_init_stacked(data.num_clients, dim))
     return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
-                eval_every)
+                eval_every, topology=topology)
 
 
 def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,

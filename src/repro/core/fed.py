@@ -13,6 +13,11 @@ and aggregates — what crosses the boundary is the codec's wire format, and
 ``uploads`` exposes it plus the updated residuals and the exact wire bytes
 (repro.comm.accounting). Byte-level Fig.-3 bookkeeping lives in
 ``repro.comm.accounting``; the float counters are re-exported below.
+
+``sample_round`` additionally takes ``topology=`` (repro.core.topology,
+DESIGN.md §11), selecting whether its clients run under a single-device vmap
+or device-sharded over the mesh via shard_map with the aggregation as a
+weighted psum — same math, same uploads surface, same wire bytes.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 from repro.comm import accounting as comm_accounting
 from repro.comm import codecs as comm_codecs
 from repro.comm import error_feedback as comm_ef
+from repro.core import topology as topology_lib
 
 
 class SampleFedData(NamedTuple):
@@ -191,7 +197,7 @@ def aggregation_weights(counts, batch_size: int, part_mask=None):
 def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
                  batch_size: int, with_value: bool = False,
                  participation: int | None = None, participation_key=None,
-                 codec=None, ef=None, codec_key=None):
+                 codec=None, ef=None, codec_key=None, topology=None):
     """Computes client uploads q_i = Σ_{n∈batch} ∇f(ω;x_n) (and Σ f if asked)
     then the server aggregate ĝ = Σ_i N_i/(B_i·N) q_i  (and F̂ likewise).
 
@@ -207,6 +213,15 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     None) and the updated residuals come back as ``uploads["ef"]``.
     Non-participating clients neither upload nor touch their residual.
 
+    ``topology=`` selects WHERE the clients execute (core/topology.py,
+    DESIGN.md §11): None/`LocalTopology` vmaps all I clients on one device
+    (the reference engine); a `ShardedTopology` distributes them over the
+    mesh's client axes via shard_map, with this same aggregation realized as
+    a weighted `lax.psum` and the codec/EF roundtrip applied per shard
+    *before* the collective. Batch selection, participation draw, and codec
+    keys are computed identically for every topology, so trajectories agree
+    up to float reassociation.
+
     Returns (grad_est, value_est, uploads) — `uploads` is everything that
     crossed the client boundary (privacy-surface assertion hook); with a
     codec that is ``uploads["encoded"]`` (wire format) and
@@ -214,6 +229,7 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     """
     if participation is not None and participation < 1:
         raise ValueError(f"participation must be >= 1, got {participation}")
+    topo = topology if topology is not None else topology_lib.LOCAL
     idx = sample_batches(data, key, batch_size)      # (I, B)
     bmask = batch_mask(data.counts, batch_size)      # (I, B)
 
@@ -227,7 +243,6 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
         val, q = jax.value_and_grad(batch_sum_loss)(params)
         return q, val
 
-    q, val = jax.vmap(client)(data.features, data.labels, idx, bmask)
     pmask = None
     # S >= I degrades to full participation (the I/S reweighting is exactly 1)
     if participation is not None and participation < data.num_clients:
@@ -235,31 +250,24 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
             participation_key = jax.random.fold_in(key, 0x5ca)
         pmask = participation_mask(participation_key, data.num_clients,
                                    participation)
-    enc = new_ef = None
+    ckeys = active = None
     nbytes = None
     if codec is not None:
-        qf, unflatten = comm_codecs.flatten_stacked(q)   # (I, P)
-        if ef is None:
-            ef = jnp.zeros_like(qf)
         if codec_key is None:
             codec_key = jax.random.fold_in(key, 0xC0DEC)
-        ckeys = jax.random.split(codec_key, qf.shape[0])
-        active = pmask if pmask is not None else jnp.ones((qf.shape[0],))
-        enc, q_hat, new_ef = jax.vmap(
-            lambda x, r, k, a: comm_ef.ef_roundtrip(codec, x, r, k, a)
-        )(qf, ef, ckeys, active)
-        q = unflatten(q_hat)
+        ckeys = jax.random.split(codec_key, data.num_clients)
+        active = pmask if pmask is not None else jnp.ones((data.num_clients,))
         nbytes = comm_accounting.sample_round_bytes(
-            qf.shape[1], data.num_clients, codec,
+            comm_codecs.tree_flat_dim(params), data.num_clients, codec,
             participation=participation, with_value=with_value)["up"]
     w = aggregation_weights(data.counts, batch_size, pmask)
-    grad_est = jax.tree.map(
-        lambda u: jnp.tensordot(w, u.astype(jnp.float32), axes=1), q)
-    value_est = jnp.dot(w, val)
-    uploads = {"q_grad_sums": q, "q_value_sums": val if with_value else None,
-               "participants": pmask, "encoded": enc, "ef": new_ef,
+    s = topo.weighted_sum(client, (data.features, data.labels, idx, bmask), w,
+                          codec=codec, ef=ef, codec_keys=ckeys, active=active)
+    uploads = {"q_grad_sums": s.uploads,
+               "q_value_sums": s.values if with_value else None,
+               "participants": pmask, "encoded": s.encoded, "ef": s.ef,
                "upload_nbytes": nbytes}
-    return grad_est, value_est, uploads
+    return s.weighted, s.value, uploads
 
 
 # ---------------------------------------------------------------------------

@@ -20,9 +20,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import topology as topology_lib
 from repro.core.algorithms import RunResult, _run
 from repro.core.fed import SampleFedData
-from repro.core.surrogate import tree_zeros_like
+from repro.core.tree import tree_zeros_like
 
 
 class LocalSSCAState(NamedTuple):
@@ -33,8 +34,12 @@ class LocalSSCAState(NamedTuple):
 
 def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
                      rounds: int, key, *, local_steps: int = 4,
-                     eval_fn=None, eval_every: int = 10) -> RunResult:
-    """Algorithm 1 with E local SSCA (momentum-form) refinements per round."""
+                     eval_fn=None, eval_every: int = 10,
+                     topology=None) -> RunResult:
+    """Algorithm 1 with E local SSCA (momentum-form) refinements per round.
+    ``topology=`` runs the E-step client loops on the mesh (the upload here
+    is the {model, momentum} pair, both N_i/N weighted-summed)."""
+    topo = topology if topology is not None else topology_lib.LOCAL
     w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
 
     def local(params, v, feat_i, lab_i, count_i, k, rho_t, gamma_t):
@@ -58,16 +63,20 @@ def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
     def step(state, inp):
         rho_t, gamma_t = inp.rho, inp.gamma
         keys = jax.random.split(inp.key, data.num_clients)
-        locals_, vs = jax.vmap(
-            lambda f_, l_, c_, k_: local(state.params, state.v, f_, l_, c_,
-                                         k_, rho_t, gamma_t)
-        )(data.features, data.labels, data.counts, keys)
+
+        def client_fn(f_, l_, c_, k_):
+            p_i, v_i = local(state.params, state.v, f_, l_, c_, k_,
+                             rho_t, gamma_t)
+            return {"params": p_i, "v": v_i}, jnp.zeros((), jnp.float32)
+
         # server: weighted model/momentum averaging (uploads: d floats each)
-        params = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), locals_)
-        v = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), vs)
-        return LocalSSCAState(params=params, v=v, t=state.t + 1), {}
+        s = topo.weighted_sum(client_fn,
+                              (data.features, data.labels, data.counts, keys),
+                              w)
+        return LocalSSCAState(params=s.weighted["params"], v=s.weighted["v"],
+                              t=state.t + 1), {}
 
     state = LocalSSCAState(params=params0, v=tree_zeros_like(params0),
                            t=jnp.ones((), jnp.int32))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl)
+                lambda s: s.params, fl=fl, topology=topology)

@@ -21,9 +21,9 @@ import jax.numpy as jnp
 
 from repro.core import schedules
 from repro.core.solvers import lemma1_nu, solve_constrained_single
-from repro.core.surrogate import (QuadSurrogate, init_surrogate, tree_axpy,
-                                  tree_dot, tree_l2sq, tree_zeros_like,
+from repro.core.surrogate import (QuadSurrogate, init_surrogate,
                                   update_surrogate)
+from repro.core.tree import tree_axpy, tree_dot, tree_l2sq, tree_zeros_like
 
 
 class SSCAState(NamedTuple):

@@ -21,6 +21,15 @@ loop only saw chunk boundaries.
 ``loop_rounds`` is the semantics-identical per-round-dispatch reference used
 by the equivalence test (tests/test_rounds.py) and the scan-vs-loop
 rounds-per-second benchmark (benchmarks/rounds_bench.py).
+
+The scan composes with the topology layer (core/topology.py, DESIGN.md §11):
+a step whose round body runs clients under a ``ShardedTopology`` embeds a
+shard_map inside the scanned step, so K rounds across D devices are still
+ONE dispatch, with the per-round q-aggregation as a weighted psum. The only
+per-client state in the carry is the error-feedback residual matrix (I, P);
+``run_rounds(..., topology=)`` pre-places it over the client axes
+(`topology.place_state`) so the carry starts sharded instead of being
+resharded by the first shard_map entry.
 """
 from __future__ import annotations
 
@@ -157,7 +166,8 @@ def chunk_sizes(rounds: int, chunk: int):
 def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
                eval_fn: Optional[Callable] = None, eval_every: int = 0,
                extract_params: Optional[Callable] = None,
-               t_start: int = 1, driver: str = "scan") -> RunResult:
+               t_start: int = 1, driver: str = "scan",
+               topology=None) -> RunResult:
     """High-level driver: scan-compile rounds, with optional periodic host
     evaluation between scan chunks.
 
@@ -166,8 +176,14 @@ def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
     chunks. history carries the eval series under their own names keyed by
     "round", plus every step metric as a full (K,) per-round series under
     "round_<name>" (with "round_t" = t_start..t_start+K-1).
+
+    ``topology`` (core/topology.py) is the client-execution engine the step
+    was built with; passing it here lets the driver pre-place per-client
+    carry state (EF residuals) over the mesh before the first dispatch.
     """
     engine = ENGINES[driver]
+    if topology is not None:
+        state = topology.place_state(state)
     extract_params = extract_params or _default_extract
     if rounds <= 0:
         return RunResult(extract_params(state), {"round": jnp.zeros((0,))},

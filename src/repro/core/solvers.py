@@ -21,7 +21,8 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.surrogate import QuadSurrogate, tree_axpy, tree_dot
+from repro.core.surrogate import QuadSurrogate
+from repro.core.tree import tree_axpy, tree_dot
 
 
 def solve_unconstrained(g, tau: float):

@@ -25,22 +25,10 @@ import jax
 import jax.numpy as jnp
 
 
-def tree_axpy(a, x, b, y):
-    """a*x + b*y over pytrees."""
-    return jax.tree.map(lambda u, v: a * u + b * v, x, y)
-
-
-def tree_dot(x, y):
-    return sum(jnp.vdot(u.astype(jnp.float32), v.astype(jnp.float32))
-               for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
-
-
-def tree_l2sq(x):
-    return tree_dot(x, x)
-
-
-def tree_zeros_like(x, dtype=None):
-    return jax.tree.map(lambda u: jnp.zeros_like(u, dtype=dtype or u.dtype), x)
+# Pytree helpers moved to repro.core.tree (single home, DESIGN.md §3);
+# re-exported here because this was their original address.
+from repro.core.tree import (tree_axpy, tree_dot, tree_l2sq,  # noqa: F401
+                             tree_zeros_like)
 
 
 class QuadSurrogate(NamedTuple):

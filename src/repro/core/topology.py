@@ -1,0 +1,222 @@
+"""Topology layer: WHERE the paper's clients execute (DESIGN.md §11).
+
+The sample-based protocol (Algorithms 1/2, the SGD baselines, the
+local-update extension) has one structural invariant: every round is
+
+    per-client compute  →  per-client upload (optionally codec+EF compressed
+    at the client boundary)  →  server weighted sum  Σ_i w_i û_i
+
+with w_i = N_i/(B_i·N) (eq. 9's aggregation, generalized to ragged clients
+and Horvitz-Thompson participation reweighting). This module abstracts that
+shape behind one contract, ``weighted_sum``, with two realizations:
+
+* :class:`LocalTopology` — all I clients on one device, `jax.vmap` over the
+  client axis, `jnp.tensordot` for the server sum. Bit-for-bit the engine
+  the repo has always run; kept as the equivalence reference.
+* :class:`ShardedTopology` — clients distributed over the mesh's
+  ("pod","data") axes via `jax.experimental.shard_map`: each device vmaps
+  its I/D resident clients, applies the codec encode + error-feedback
+  residual update *per shard before any collective* (compression happens at
+  the client boundary, exactly as in the simulation), reduces its local
+  Σ w_i û_i partial, and the eq.-(9) server aggregation is realized as a
+  weighted `lax.psum` over the client axes. Per-client state (EF residuals,
+  uploads) never leaves its shard; only the B-summed, weighted q-statistics
+  cross devices — the mesh realization of the paper's model-aggregation
+  privacy argument.
+
+Both topologies compose with the scan-compiled round driver
+(`core/rounds.py`): the shard_map sits inside the scanned step, so a K-round
+epoch is still ONE dispatch, now spanning D devices, with the per-client EF
+residuals riding the scan carry sharded over clients
+(`ShardedTopology.place_state` pre-places them).
+
+Equivalence: sharded == local up to float reassociation (per-device partial
+sums + psum vs one tensordot); `tests/test_topology.py` pins the trajectory
+at atol 1e-5 with codec=int8 + error feedback + partial participation all
+enabled at once.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import codecs as comm_codecs
+from repro.comm import error_feedback as comm_ef
+
+
+class ClientSums(NamedTuple):
+    """Everything a round produces at and across the client boundary."""
+    weighted: object          # Σ_i w_i û_i — server aggregate (pytree)
+    value: jnp.ndarray        # Σ_i w_i val_i — scalar aggregate
+    uploads: object           # per-client û_i, stacked (I, ...) pytree
+    values: jnp.ndarray       # per-client val_i, (I,)
+    encoded: object           # codec wire format per client (None if dense)
+    ef: object                # updated EF residuals (I, P) (None if dense)
+
+
+def _compress_stacked(codec, uploads, ef, codec_keys, active):
+    """Shared client-boundary compression: flatten each client's upload to
+    one (P,) vector, run the codec through an error-feedback roundtrip, and
+    hand back the decoded uploads the server will aggregate. Identical code
+    runs under local vmap and inside each shard_map shard — the client
+    boundary does not move with the topology."""
+    uf, unflatten = comm_codecs.flatten_stacked(uploads)
+    if ef is None:
+        ef = jnp.zeros_like(uf)
+    if active is None:
+        active = jnp.ones((uf.shape[0],), jnp.float32)
+    enc, u_hat, new_ef = jax.vmap(
+        lambda x, r, k, a: comm_ef.ef_roundtrip(codec, x, r, k, a)
+    )(uf, ef, codec_keys, active)
+    return enc, unflatten(u_hat), new_ef
+
+
+def _weighted(weights, uploads, values):
+    weighted = jax.tree.map(
+        lambda u: jnp.tensordot(weights, u.astype(jnp.float32), axes=1),
+        uploads)
+    return weighted, jnp.dot(weights, values)
+
+
+class LocalTopology:
+    """All clients on one device: vmap over the client axis (the reference
+    engine — every sharded result is pinned against this one)."""
+
+    name = "local"
+    num_shards = 1
+
+    def weighted_sum(self, client_fn: Callable, args, weights, *,
+                     codec=None, ef=None, codec_keys=None,
+                     active=None) -> ClientSums:
+        """client_fn(*per_client_args) -> (upload pytree, val scalar); args
+        are (I, ...)-leading arrays; returns all of :class:`ClientSums`."""
+        uploads, values = jax.vmap(client_fn)(*args)
+        enc = new_ef = None
+        if codec is not None:
+            enc, uploads, new_ef = _compress_stacked(codec, uploads, ef,
+                                                     codec_keys, active)
+        weighted, value = _weighted(weights, uploads, values)
+        return ClientSums(weighted=weighted, value=value, uploads=uploads,
+                          values=values, encoded=enc, ef=new_ef)
+
+    def place_state(self, state):
+        """No placement to do on a single device."""
+        return state
+
+
+class ShardedTopology:
+    """Clients distributed over the mesh's client axes via shard_map; the
+    eq.-(9) server aggregation is a weighted `lax.psum`.
+
+    mesh: a `jax.sharding.Mesh` whose client axes (default: the ("pod",
+    "data") axes present, else all axes) carry the clients. The client count
+    I must be divisible by the product of the client-axis sizes D; each
+    device executes I/D clients.
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh, axes: Optional[Sequence[str]] = None):
+        self.mesh = mesh
+        if axes is None:
+            axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            axes = axes or tuple(mesh.axis_names)
+        self.axes = tuple(axes)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.num_shards = math.prod(sizes[a] for a in self.axes)
+
+    def _check_divisible(self, num_clients: int):
+        if num_clients % self.num_shards:
+            raise ValueError(
+                f"num_clients={num_clients} must be divisible by the "
+                f"{self.num_shards} client shards of mesh axes {self.axes} "
+                "(pad the client set or pick a smaller mesh)")
+
+    def client_sharding(self):
+        """NamedSharding placing a leading client axis over this topology's
+        mesh axes (used to pre-place datasets and EF carries)."""
+        return jax.sharding.NamedSharding(self.mesh, P(self.axes))
+
+    def place_state(self, state):
+        """Pre-place the per-client EF residuals of a `CommCarry` scan state
+        over the client axes, so the carry starts (and stays) sharded across
+        the K scanned rounds instead of being resharded on first use."""
+        if not isinstance(state, comm_ef.CommCarry) or state.ef is None:
+            return state
+        sh = self.client_sharding()
+
+        def put(x):
+            if (hasattr(x, "ndim") and x.ndim >= 1
+                    and x.shape[0] % self.num_shards == 0):
+                return jax.device_put(x, sh)
+            return x
+
+        return state._replace(ef=jax.tree.map(put, state.ef))
+
+    def weighted_sum(self, client_fn: Callable, args, weights, *,
+                     codec=None, ef=None, codec_keys=None,
+                     active=None) -> ClientSums:
+        """Same contract as :meth:`LocalTopology.weighted_sum`, executed
+        shard-locally with the server sum as a weighted psum. Codec encode +
+        EF update run per shard BEFORE the collective: what crosses the
+        device boundary is the already-weighted decoded aggregate, and the
+        wire format / residuals stay client-resident."""
+        self._check_divisible(weights.shape[0])
+        axes = self.axes
+        spec = P(axes)
+        has_codec = codec is not None
+
+        def body(args_l, weights_l, ef_l, keys_l, act_l):
+            uploads, values = jax.vmap(client_fn)(*args_l)
+            enc = new_ef = None
+            if has_codec:
+                enc, uploads, new_ef = _compress_stacked(
+                    codec, uploads, ef_l, keys_l, act_l)
+            partial, val_partial = _weighted(weights_l, uploads, values)
+            weighted = jax.lax.psum(partial, axes)
+            value = jax.lax.psum(val_partial, axes)
+            return weighted, value, uploads, values, enc, new_ef
+
+        sharded = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec, spec, spec, spec, spec),
+            out_specs=(P(), P(), spec, spec, spec, spec),
+            check_rep=False)
+        weighted, value, uploads, values, enc, new_ef = sharded(
+            tuple(args), weights, ef, codec_keys, active)
+        return ClientSums(weighted=weighted, value=value, uploads=uploads,
+                          values=values, encoded=enc, ef=new_ef)
+
+
+LOCAL = LocalTopology()
+
+
+def make_topology(name: str, mesh=None, axes=None):
+    """CLI-name -> topology. "local" ignores mesh; "sharded" uses the given
+    mesh or builds a 1-D client mesh over all host devices
+    (`launch.mesh.make_client_mesh`)."""
+    if name == "local":
+        return LOCAL
+    if name == "sharded":
+        if mesh is None:
+            from repro.launch.mesh import make_client_mesh
+            mesh = make_client_mesh()
+        return ShardedTopology(mesh, axes=axes)
+    raise ValueError(f"unknown topology {name!r} (choose local|sharded)")
+
+
+def sharded_for(num_clients: int) -> ShardedTopology:
+    """ShardedTopology over the MOST host devices that divide the client
+    count — the one divisibility-fitting policy shared by the example
+    sweeps and the adaptive tests (a 1-device fit still runs the
+    shard_map + psum path, so callers need no special-casing)."""
+    from repro.launch.mesh import make_client_mesh
+    d = jax.device_count()
+    while num_clients % d:
+        d -= 1
+    return ShardedTopology(make_client_mesh(d))

@@ -1,0 +1,36 @@
+"""Pytree arithmetic helpers shared across the SSCA stack.
+
+One home for the small linear-algebra-over-pytrees vocabulary (axpy, inner
+products, zeros) that the surrogate recursion (eq. 9), the closed-form
+solvers (Lemma 1, Problems 5/10), the optimizer steps, and the baselines all
+speak. Everything here is pure jnp over `jax.tree` — jit/vmap/scan/shard_map
+transparent — and accumulates in float32 regardless of leaf dtype, because
+the surrogate buffers are float32 by contract (DESIGN.md §3).
+
+`core/surrogate.py` re-exports these names for back-compat (they originally
+lived there); new code should import from `repro.core.tree`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_axpy(a, x, b, y):
+    """a*x + b*y over pytrees."""
+    return jax.tree.map(lambda u, v: a * u + b * v, x, y)
+
+
+def tree_dot(x, y):
+    """Σ ⟨x_leaf, y_leaf⟩ accumulated in float32."""
+    return sum(jnp.vdot(u.astype(jnp.float32), v.astype(jnp.float32))
+               for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+
+def tree_l2sq(x):
+    """‖x‖² over all leaves (float32 accumulation)."""
+    return tree_dot(x, x)
+
+
+def tree_zeros_like(x, dtype=None):
+    return jax.tree.map(lambda u: jnp.zeros_like(u, dtype=dtype or u.dtype), x)

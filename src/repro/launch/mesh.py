@@ -34,6 +34,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
+def make_client_mesh(num_devices: int | None = None, axis: str = "data"):
+    """Small 1-D client mesh for the sharded sample-based topology
+    (core/topology.py): `axis` carries the paper's clients, client i lives on
+    device i mod D. Defaults to ALL host devices, so CI can exercise the
+    collective path with ``--xla_force_host_platform_device_count=8`` and a
+    laptop gets a 1-device mesh (psum over a size-1 axis — the degenerate
+    sharded topology every tier-1 run covers)."""
+    import numpy as np
+    devices = jax.devices()
+    n = num_devices or len(devices)
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices for the client mesh, have "
+                           f"{len(devices)}; set XLA_FLAGS="
+                           f"--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+
+
 def data_axes(mesh) -> tuple:
     """The axes a global-batch dimension shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -16,10 +16,18 @@ clients-as-data-shards picture this compresses exactly what Algorithm 1's
 clients put on the wire, and the logged ``upload_bytes`` is the per-round
 wire cost from repro.comm.accounting.
 
+Client topology (DESIGN.md §11): ``--topology sharded`` makes the
+clients-as-data-shards picture *explicit* — the per-round batch is split
+into ``--shards`` equal client shards distributed over a 1-D device mesh via
+core/topology.py's shard_map engine, each shard computes its local gradient
+(and codec/EF compresses it at the client boundary), and the Algorithm-1
+aggregation is a weighted psum over the mesh. ``--topology local`` (default)
+keeps the single-dispatch pjit picture unchanged.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
           [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
-          [--codec-impl pallas]
+          [--codec-impl pallas] [--topology local|sharded] [--shards 8]
 """
 from __future__ import annotations
 
@@ -31,10 +39,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import (CommCarry, ef_init, ef_roundtrip, flatten_tree,
-                        make_codec, tree_flat_dim, with_comm_carry)
+from repro.comm import (CommCarry, ef_init, ef_init_stacked, ef_roundtrip,
+                        flatten_tree, make_codec, tree_flat_dim,
+                        with_comm_carry)
 from repro.configs import FLConfig, get_config
 from repro.core import optimizer, rounds
+from repro.core import topology as topology_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import get_model
 
@@ -108,12 +118,49 @@ def jit_train_step(model, cfg, fl, mesh, batch_like, constrained=False):
 
 
 def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
-                      constrained: bool = False, codec=None):
+                      constrained: bool = False, codec=None, topology=None):
     """Fuses per-round data selection into the train step so the whole round
     chain is scannable: step(state, RoundInputs) -> (state, metrics). With a
     codec, the gradient is compressed through an error-feedback roundtrip
-    before the SSCA update and the state is a CommCarry."""
+    before the SSCA update and the state is a CommCarry.
+
+    With a sharded ``topology`` the batch is reshaped into D equal client
+    shards and the gradient (+ loss) estimate is computed by the topology
+    engine — per-shard value_and_grad, per-shard codec/EF (residuals become
+    an (D, P) matrix in the CommCarry), equal-weight 1/D psum aggregation.
+    The local path is byte-identical to before."""
     from repro.data.synthetic import sample_window
+
+    shards = getattr(topology, "num_shards", 1) if topology is not None else 1
+    if topology is not None and topology.name == "sharded":
+        if batch % shards:
+            raise ValueError(f"--batch {batch} must be divisible by the "
+                             f"{shards} client shards of --topology sharded")
+
+        def sharded_body(state, inp, ef):
+            data = sample_window(tokens, inp.key, batch, seq)
+            shard = jax.tree.map(
+                lambda x: x.reshape((shards, batch // shards) + x.shape[1:]),
+                data)
+
+            def client_fn(b):
+                loss, grads = jax.value_and_grad(model.loss_fn)(
+                    state.params, b, cfg)
+                return grads, loss
+
+            ckeys = (jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
+                                      shards) if codec is not None else None)
+            w = jnp.full((shards,), 1.0 / shards, jnp.float32)
+            s = topology.weighted_sum(client_fn, (shard,), w, codec=codec,
+                                      ef=ef, codec_keys=ckeys)
+            new, metrics = _ssca_update(state, s.value, s.weighted, fl,
+                                        inp.rho, inp.gamma, constrained)
+            if codec is not None:
+                metrics["upload_bytes"] = float(
+                    shards * codec.nbytes(tree_flat_dim(state.params)))
+            return new, s.ef, metrics
+
+        return with_comm_carry(codec, sharded_body)
 
     train_step = (make_constrained_train_step if constrained
                   else make_train_step)(model, cfg, fl)
@@ -145,7 +192,8 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                fl: Optional[FLConfig] = None, log_every: int = 10,
                ckpt_path: Optional[str] = None, seed: int = 0,
                driver: str = "scan", codec: Optional[str] = None,
-               topk_frac: float = 0.01, codec_impl: str = "ref"):
+               topk_frac: float = 0.01, codec_impl: str = "ref",
+               topology: str = "local", shards: Optional[int] = None):
     from repro.data.synthetic import token_dataset
 
     cfg = get_config(arch)
@@ -158,14 +206,20 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
     params = model.init(key, cfg)
     state = (optimizer.ssca_constrained_init(params) if constrained
              else optimizer.ssca_init(params))
+    topo = topology_lib.make_topology(
+        topology, mesh=(mesh_lib.make_client_mesh(shards)
+                        if topology == "sharded" else None))
     codec_obj = make_codec(codec, topk_frac=topk_frac, impl=codec_impl)
     if codec_obj is not None:
-        state = CommCarry(opt=state, ef=ef_init(tree_flat_dim(params)))
+        dim = tree_flat_dim(params)
+        ef0 = (ef_init_stacked(topo.num_shards, dim)
+               if topo.name == "sharded" else ef_init(dim))
+        state = topo.place_state(CommCarry(opt=state, ef=ef0))
 
     toks = token_dataset(jax.random.fold_in(key, 1), cfg.vocab_size,
                          n_tokens=max(200_000, batch * (seq + 1) * 4))
     step_fn = make_scanned_step(model, cfg, fl, toks, batch, seq, constrained,
-                                codec=codec_obj)
+                                codec=codec_obj, topology=topo)
     engine = rounds.ENGINES[driver]
     sizes = rounds.chunk_sizes(steps, log_every)
 
@@ -206,12 +260,21 @@ def main():
     ap.add_argument("--codec-impl", choices=("ref", "pallas"), default="ref",
                     help="quantizer backend: pure-jnp ref, or the fused "
                          "Pallas quantize-dequantize kernel (TPU)")
+    ap.add_argument("--topology", choices=("local", "sharded"),
+                    default="local",
+                    help="client execution engine (DESIGN.md §11): local = "
+                         "single-device; sharded = clients-as-batch-shards "
+                         "over a device mesh via shard_map + psum")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="client-shard count for --topology sharded "
+                         "(default: all host devices; must divide --batch)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     train_loop(args.arch, args.steps, args.batch, args.seq, smoke=args.smoke,
                constrained=args.constrained, ckpt_path=args.ckpt,
                driver=args.driver, codec=args.codec,
-               topk_frac=args.topk_frac, codec_impl=args.codec_impl)
+               topk_frac=args.topk_frac, codec_impl=args.codec_impl,
+               topology=args.topology, shards=args.shards)
 
 
 if __name__ == "__main__":
