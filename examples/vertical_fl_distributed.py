@@ -1,53 +1,53 @@
-"""Vertical (feature-based) FL on a device mesh: Algorithm 3 with each
-feature client resident on its own "model"-axis shard (shard_map + psum
-h-exchange — the distributed realization of the paper's §IV).
+"""Vertical (feature-based) FL on a device mesh: Algorithms 3/4 through the
+shared topology + scan engine (DESIGN.md §12) — each feature client resident
+on its own "model"-axis shard, the paper's step-4 h-exchange as a tiled
+all_gather, and K rounds compiled to one dispatch.
 
     PYTHONPATH=src python examples/vertical_fl_distributed.py --clients 4
+    PYTHONPATH=src python examples/vertical_fl_distributed.py --clients 4 \
+        --constrained --cost-limit 1.2 --codec int8
 
 Uses virtual host devices so it runs anywhere; on a real cluster the same
-code maps clients onto physical chips.
+code maps clients onto physical chips. ``--topology local`` runs the same
+mathematics as a single-device vmap — the trajectories agree bit-for-bit
+(tests/test_feature_topology.py pins it).
 """
 import argparse
 import os
-import sys
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--topology", choices=("sharded", "local"),
+                    default="sharded")
+    ap.add_argument("--constrained", action="store_true",
+                    help="run Algorithm 4: min ‖ω‖² s.t. loss <= U (40)")
+    ap.add_argument("--cost-limit", type=float, default=1.2,
+                    help="U for --constrained")
+    ap.add_argument("--codec", choices=("none", "int8", "int4", "topk"),
+                    default="none",
+                    help="compress the head + block q-uploads")
+    ap.add_argument("--driver", choices=("scan", "loop"), default="scan")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.clients}")
 
-    import jax
-    import jax.numpy as jnp
-    from repro.configs.base import FLConfig
-    from repro.core import fed
-    from repro.data.synthetic import classification_dataset
-    from repro.launch.feature_dist import train_feature_distributed
-    from repro.models import mlp
+    from repro.launch.train import feature_train_loop
 
-    mesh = jax.make_mesh((args.clients,), ("model",))
-    key = jax.random.PRNGKey(0)
-    print(f"{args.clients} feature clients, one per mesh shard")
-    (z, y, _), _ = classification_dataset(key, n=8000, num_features=128,
-                                          num_classes=10, test_n=10, noise=4.0)
-    fdata = fed.partition_features(z, y, args.clients)
-    pi = fdata.feature_blocks.shape[-1]
-    w0 = jax.random.normal(key, (10, 32)) * 0.2
-    blocks = jax.random.normal(jax.random.fold_in(key, 1),
-                               (args.clients, 32, pi)) * 0.2
-    fl = FLConfig(batch_size=64, a1=0.9, a2=0.5, alpha_rho=0.1,
-                  alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5, mode="feature")
-    params, losses = train_feature_distributed(
-        mesh, mlp.per_sample_loss_from_h, mlp.client_h, w0, blocks,
-        fdata.feature_blocks, fdata.labels, fl, rounds=args.rounds,
-        key=jax.random.PRNGKey(2))
-    print("per-checkpoint batch loss:", [round(l, 4) for l in losses])
-    print("h-exchange per round: B x J floats over the model axis "
-          "(the paper's Alg-3 step 4, as a psum)")
+    print(f"{args.clients} feature clients, topology={args.topology}"
+          + (", constrained (Algorithm 4)" if args.constrained
+             else " (Algorithm 3)"))
+    result = feature_train_loop(
+        clients=args.clients, rounds=args.rounds,
+        constrained=args.constrained, cost_limit=args.cost_limit,
+        topology=args.topology, codec=args.codec, driver=args.driver,
+        log_every=max(args.rounds // 10, 1))
+    print("h-exchange per round: (I x B x J) floats all-gathered over the "
+          "model axis (the paper's Alg-3 step 4); "
+          f"axis bytes/round = {float(result.history['round_axis_bytes'][0]):.0f}")
 
 
 if __name__ == "__main__":

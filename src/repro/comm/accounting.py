@@ -60,6 +60,20 @@ def psum_axis_bytes(d: int, num_shards: int, with_value: bool = False,
     return 2 * (num_shards - 1) * payload * num_streams
 
 
+def all_gather_axis_bytes(d_total: int, num_shards: int) -> int:
+    """Bytes crossing the client mesh axis per round when the feature-based
+    step-4 h-broadcast is realized as a tiled `lax.all_gather` over D client
+    shards (core/topology.py's ShardedTopology.feature_sum).
+
+    d_total is the FULL gathered element count (I·B·J for the h-exchange);
+    a ring all-gather moves (D−1) chunks of d_total/D elements per device,
+    i.e. (D−1)·d_total fp32 over the whole axis. D = 1 costs nothing — the
+    local topology is recovered."""
+    if num_shards <= 1:
+        return 0
+    return (num_shards - 1) * F32_BYTES * d_total
+
+
 def feature_round_bytes(d_head: int, d_blocks: Sequence[int], batch_size: int,
                         h_dim: int, num_clients: int,
                         codec=None) -> Dict[str, int]:

@@ -237,6 +237,30 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
 # ---------------------------------------------------------------------------
 
 
+def _run_feature(step_fn, state, key, num_rounds: int,
+                 eval_fn: Optional[Callable], eval_every: int,
+                 extract_params=None, fl=None, driver: str = "scan",
+                 topology=None):
+    """Feature-based `_run`: same shim, but the per-client carry placement is
+    the feature-EF dict layout (rounds.run_feature_rounds /
+    topology.place_feature_state). Shared with baselines' feature drivers."""
+    fl = fl if fl is not None else _NULL_SCHED
+    return rounds_lib.run_feature_rounds(
+        step_fn, state, fl, key, num_rounds, eval_fn=eval_fn,
+        eval_every=eval_every, extract_params=extract_params, driver=driver,
+        topology=topology)
+
+
+def _feature_axis_bytes(topology, uploads):
+    """Static per-round bytes over the client mesh axis for a feature round
+    (0.0 for local): the all_gather realization of the step-4 h-broadcast
+    moves the full (I, B, J) h; uploads only supplies the (trace-time
+    static) element count."""
+    shards = getattr(topology, "num_shards", 1) if topology is not None else 1
+    return float(comm_accounting.all_gather_axis_bytes(
+        uploads["h_exchange"].size, shards))
+
+
 def _feature_upload_bytes(uploads, grad_est, data, batch_size: int):
     """Per-round uplink bytes of a feature-based round: the codec path reuses
     fed.feature_round's exact figure, the dense path derives fp32 bytes from
@@ -261,16 +285,18 @@ def _feature_ef0(params0, num_clients: int):
 
 
 def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                       update_fn):
+                       update_fn, topology=None):
     """Shared Algorithm-3/4 step body: feature_round + the given optimizer
-    update, with optional codec/EF threading."""
+    update, with optional codec/EF threading. topology selects the feature
+    client-execution engine (DESIGN.md §12)."""
     def body(state, inp, ef):
         grad_est, val_est, up = fed.feature_round(
             state.params, data, inp.key, fl.batch_size, head_loss_from_h,
-            client_h, codec=codec, ef=ef)
+            client_h, codec=codec, ef=ef, topology=topology)
         new, metrics = update_fn(state, grad_est, val_est, inp)
         metrics["upload_bytes"] = _feature_upload_bytes(up, grad_est, data,
                                                        fl.batch_size)
+        metrics["axis_bytes"] = _feature_axis_bytes(topology, up)
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -278,18 +304,18 @@ def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
 
 def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan", codec=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         return new, {"loss_est": val_est}
 
     step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                              update)
+                              update, topology)
     state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
-    return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver)
+    return _run_feature(step, state, key, rounds, eval_fn, eval_every,
+                        fl=fl, driver=driver, topology=topology)
 
 
 # ---------------------------------------------------------------------------
@@ -299,15 +325,15 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
 
 def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan", codec=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
 
     step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                              update)
+                              update, topology)
     state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
-    return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver)
+    return _run_feature(step, state, key, rounds, eval_fn, eval_every,
+                        fl=fl, driver=driver, topology=topology)

@@ -34,11 +34,11 @@ from repro.comm import error_feedback as comm_ef
 from repro.comm.error_feedback import with_comm_carry
 from repro.core import fed
 from repro.core import topology as topology_lib
-from repro.core.algorithms import (RunResult, _feature_ef0,
-                                   _feature_upload_bytes, _run,
-                                   _wrap_codec_state)
+from repro.core.algorithms import (RunResult, _feature_axis_bytes,
+                                   _feature_ef0, _feature_upload_bytes, _run,
+                                   _run_feature, _wrap_codec_state)
 from repro.core.fed import FeatureFedData, SampleFedData
-from repro.core.tree import tree_l2sq, tree_zeros_like
+from repro.core.tree import tree_axpy, tree_l2sq, tree_zeros_like
 
 
 class SGDConfig(NamedTuple):
@@ -136,9 +136,10 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
 def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
                 cfg: SGDConfig, rounds: int, key, eval_fn=None,
                 eval_every: int = 10, momentum: bool = False,
-                codec=None) -> RunResult:
+                codec=None, topology=None) -> RunResult:
     """One global (momentum-)SGD step per round via the Alg-3 info collection
-    (codec compresses the same q-uploads as Algorithm 3)."""
+    (codec compresses the same q-uploads as Algorithm 3; topology runs the
+    feature clients local or model-axis sharded, DESIGN.md §12)."""
     def body(state, inp, ef):
         if momentum:
             params, v, t = state.params, state.v, state.t
@@ -146,7 +147,7 @@ def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
             params, t = state.params, state.t
         grad_est, _, up = fed.feature_round(
             params, data, inp.key, cfg.local_batch, head_loss_from_h,
-            client_h, codec=codec, ef=ef)
+            client_h, codec=codec, ef=ef, topology=topology)
         grad_est = jax.tree.map(
             lambda g, p: g + 2 * cfg.l2_lambda * p, grad_est, params)
         lr = cfg.lr_a if momentum else _lr(cfg, t)
@@ -168,5 +169,113 @@ def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
         state = SGDState(params=params0, t=jnp.ones((), jnp.int32))
     state = _wrap_codec_state(
         state, codec, lambda: _feature_ef0(params0, data.num_clients))
-    return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
-                eval_every)
+    return _run_feature(with_comm_carry(codec, body), state, key, rounds,
+                        eval_fn, eval_every, topology=topology)
+
+
+# ---------------------------------------------------------------------------
+# constrained vertical-FL baselines (benchmarks/feature_bench.py scenario:
+# min ‖ω‖² s.t. F(ω) <= U, the paper's formulation (40) under the Alg-3/4
+# feature composition) — both collect the exact same per-round information
+# as Algorithm 4 (fed.feature_round: h-exchange + head/block q-uploads), so
+# rounds and upload bytes are apples-to-apples; only the update rule differs.
+# ---------------------------------------------------------------------------
+
+
+class FWConfig(NamedTuple):
+    """Projection-free federated Frank-Wolfe baseline (after Dadras et al.,
+    *Federated Frank-Wolfe Algorithm*): exact-penalty reformulation
+    min_{‖ω‖<=R} ‖ω‖² + c·max(0, F̂(ω) − U) over an L2 ball, linear
+    minimization oracle s = −R·g/‖g‖, classic step η_t = a/(t+2)."""
+    radius: float = 10.0       # feasible-ball radius R (the LMO domain)
+    penalty: float = 10.0      # exact-penalty weight c on the hinge
+    lr_a: float = 2.0          # η_t = lr_a/(t+2)
+
+
+def feature_frank_wolfe(head_loss_from_h, client_h, params0,
+                        data: FeatureFedData, fl, cfg: FWConfig, rounds: int,
+                        key, eval_fn=None, eval_every: int = 10,
+                        driver: str = "scan", codec=None,
+                        topology=None) -> RunResult:
+    """ω_{t+1} = (1−η_t)ω_t + η_t·s_t with s_t the L2-ball LMO of the
+    penalized subgradient g_t = 2ω_t + c·1[F̂>U]·∇F̂(ω_t). The iterate stays
+    inside the ball by convexity, so the method is projection-free; it has
+    no dual iterate, so feature_bench scores its KKT stationarity at the
+    best-response multiplier (solvers.kkt_best_nu)."""
+    def body(state, inp, ef):
+        grad_est, val_est, up = fed.feature_round(
+            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
+            client_h, codec=codec, ef=ef, topology=topology)
+        act = (val_est > fl.cost_limit).astype(jnp.float32)
+        g = jax.tree.map(lambda p, gf: 2.0 * p + cfg.penalty * act * gf,
+                         state.params, grad_est)
+        norm = jnp.sqrt(jnp.maximum(tree_l2sq(g), 1e-24))
+        s_lmo = jax.tree.map(lambda gg: -cfg.radius * gg / norm, g)
+        eta = cfg.lr_a / (state.t.astype(jnp.float32) + 2.0)
+        params = jax.tree.map(
+            lambda p, s_: ((1.0 - eta) * p + eta * s_).astype(p.dtype),
+            state.params, s_lmo)
+        new = SGDState(params=params, t=state.t + 1)
+        metrics = {"loss_est": val_est,
+                   "upload_bytes": _feature_upload_bytes(
+                       up, grad_est, data, fl.batch_size),
+                   "axis_bytes": _feature_axis_bytes(topology, up)}
+        return new, up["ef"], metrics
+
+    state = _wrap_codec_state(
+        SGDState(params=params0, t=jnp.ones((), jnp.int32)), codec,
+        lambda: _feature_ef0(params0, data.num_clients))
+    return _run_feature(with_comm_carry(codec, body), state, key, rounds,
+                        eval_fn, eval_every, fl=fl, driver=driver,
+                        topology=topology)
+
+
+class DualConfig(NamedTuple):
+    """Dual-decomposition / Arrow-Hurwicz baseline (after Fan et al., *A dual
+    approach for federated learning*): alternating primal descent on the
+    Lagrangian L(ω,ν) = ‖ω‖² + ν(F̂(ω) − U) and projected dual ascent, both
+    with diminishing a/√t stepsizes."""
+    lr_primal: float = 0.2
+    lr_dual: float = 1.0
+    nu_max: float = 1e4        # dual cap, mirrors the SSCA penalty_c role
+
+
+class DualState(NamedTuple):
+    params: object
+    nu: jnp.ndarray
+    t: jnp.ndarray
+
+
+def feature_dual_decomposition(head_loss_from_h, client_h, params0,
+                               data: FeatureFedData, fl, cfg: DualConfig,
+                               rounds: int, key, eval_fn=None,
+                               eval_every: int = 10, driver: str = "scan",
+                               codec=None, topology=None) -> RunResult:
+    """ω ← ω − η_ω(2ω + ν∇F̂);  ν ← clip(ν + η_ν(F̂ − U), 0, ν_max). Its ν
+    IS a dual iterate, so feature_bench scores its KKT residuals directly."""
+    def body(state, inp, ef):
+        grad_est, val_est, up = fed.feature_round(
+            state.params, data, inp.key, fl.batch_size, head_loss_from_h,
+            client_h, codec=codec, ef=ef, topology=topology)
+        sqrt_t = jnp.sqrt(state.t.astype(jnp.float32))
+        lag = jax.tree.map(lambda p, gf: 2.0 * p + state.nu * gf,
+                           state.params, grad_est)
+        params = tree_axpy(1.0, state.params, -cfg.lr_primal / sqrt_t, lag)
+        params = jax.tree.map(lambda p, p0: p.astype(p0.dtype), params,
+                              state.params)
+        nu = jnp.clip(state.nu + (cfg.lr_dual / sqrt_t)
+                      * (val_est - fl.cost_limit), 0.0, cfg.nu_max)
+        new = DualState(params=params, nu=nu, t=state.t + 1)
+        metrics = {"loss_est": val_est, "nu": nu,
+                   "upload_bytes": _feature_upload_bytes(
+                       up, grad_est, data, fl.batch_size),
+                   "axis_bytes": _feature_axis_bytes(topology, up)}
+        return new, up["ef"], metrics
+
+    state = _wrap_codec_state(
+        DualState(params=params0, nu=jnp.zeros((), jnp.float32),
+                  t=jnp.ones((), jnp.int32)), codec,
+        lambda: _feature_ef0(params0, data.num_clients))
+    return _run_feature(with_comm_carry(codec, body), state, key, rounds,
+                        eval_fn, eval_every, fl=fl, driver=driver,
+                        topology=topology)

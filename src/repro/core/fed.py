@@ -28,7 +28,6 @@ import jax.numpy as jnp
 
 from repro.comm import accounting as comm_accounting
 from repro.comm import codecs as comm_codecs
-from repro.comm import error_feedback as comm_ef
 from repro.core import topology as topology_lib
 
 
@@ -146,6 +145,39 @@ def partition_features(features, labels, num_clients) -> FeatureFedData:
 
 
 # ---------------------------------------------------------------------------
+# shared codec-argument validation — sample_round and feature_round fail
+# identically (same messages, same conditions); tests/test_feature_topology.py
+# pins the parity
+# ---------------------------------------------------------------------------
+
+
+def _check_codec_args(round_name: str, codec, ef):
+    """Reject EF residuals without a codec in BOTH round functions (silently
+    ignoring them would drop the caller's error-feedback state)."""
+    if codec is None and ef is not None:
+        raise ValueError(
+            f"{round_name}: error-feedback residuals (ef=) were passed "
+            "without codec= — EF is only meaningful for a lossy codec; "
+            "pass codec= or drop ef=")
+
+
+def _check_ef_shape(round_name: str, stream: str, residual, expected_shape):
+    """Shape-check one EF residual stream against the upload it feeds, with
+    the same message format for both round functions."""
+    if residual is None:
+        return
+    if not hasattr(residual, "shape") or tuple(residual.shape) != tuple(
+            expected_shape):
+        got = tuple(residual.shape) if hasattr(residual, "shape") else type(
+            residual).__name__
+        raise ValueError(
+            f"{round_name}: error-feedback residuals for stream "
+            f"'{stream}' have shape {got}, expected {tuple(expected_shape)} "
+            "— rebuild the residual state with the matching "
+            "repro.comm.error_feedback ef_init helper")
+
+
+# ---------------------------------------------------------------------------
 # sample-based rounds (Algorithm 1/2 steps 3-4)
 # ---------------------------------------------------------------------------
 
@@ -229,6 +261,10 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     """
     if participation is not None and participation < 1:
         raise ValueError(f"participation must be >= 1, got {participation}")
+    _check_codec_args("sample_round", codec, ef)
+    if codec is not None:
+        _check_ef_shape("sample_round", "q_grad", ef,
+                        (data.num_clients, comm_codecs.tree_flat_dim(params)))
     topo = topology if topology is not None else topology_lib.LOCAL
     idx = sample_batches(data, key, batch_size)      # (I, B)
     bmask = batch_mask(data.counts, batch_size)      # (I, B)
@@ -277,7 +313,7 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
 
 def feature_round(params, data: FeatureFedData, key, batch_size: int,
                   head_loss_from_h: Callable, client_h: Callable,
-                  codec=None, ef=None, codec_key=None):
+                  codec=None, ef=None, codec_key=None, topology=None):
     """Faithful Alg-3 information flow for f(ω;x) = g0(ω0, Σ_i h_i(ω_i, x_i)):
 
       server picks N^(t)  →  client i computes h_i and broadcasts it  →
@@ -291,59 +327,75 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
     ``ef = {"w0": (P0,), "blocks": (I, Pb)}`` (the step-4 h-exchange stays
     dense — it feeds gradients, not the aggregate, and is accounted in
     repro.comm.accounting.feature_round_bytes).
+
+    ``topology=`` selects WHERE the feature clients execute (DESIGN.md §12):
+    None/`LocalTopology` vmaps all I clients on one device (the reference
+    engine); a `ShardedTopology` built over a "model"-axis mesh
+    (`launch.mesh.make_feature_mesh`) places each client on its own shard,
+    with the h-exchange realized as a tiled `lax.all_gather` — bit-identical
+    h_sum, hence bit-identical gradients and wire formats across topologies.
+    Batch selection and codec keys are computed identically for every
+    topology.
+
     Returns (grad_est pytree like params, value_est, uploads).
     """
+    _check_codec_args("feature_round", codec, ef)
+    topo = topology if topology is not None else topology_lib.LOCAL
     n = data.total
     idx = jax.random.randint(key, (batch_size,), 0, n)            # server-chosen
     yb = jnp.take(data.labels, idx, axis=0)
     zb = jnp.take(data.feature_blocks, idx, axis=1)               # (I, B, P_i)
 
-    # step 4: h-exchange — client i computes h_i on its block
-    h = jax.vmap(client_h)(params["blocks"], zb)                  # (I, B, J)
-    h_sum = jnp.sum(h, axis=0)
-
-    # step 5: q_{f,0,0} — head gradient from aggregated h only
     def head_sum_loss(w0, h_sum_):
         return jnp.sum(head_loss_from_h(w0, h_sum_, yb))
 
-    val, q00 = jax.value_and_grad(head_sum_loss)(params["w0"], h_sum)
+    # step 5: q_{f,0,0} — head gradient from aggregated h only; the closure
+    # over (params["w0"], yb) is replicated compute under a sharded topology
+    def head_fn(h_sum):
+        val, q00 = jax.value_and_grad(head_sum_loss)(params["w0"], h_sum)
+        # step 6's upstream: dl/dh backpropagated through the aggregate
+        dl_dh = jax.grad(lambda hs: head_sum_loss(params["w0"], hs))(h_sum)
+        return val, q00, dl_dh
 
     # step 6: q_{f,0,i} — via chain rule through client i's own h_i
-    dl_dh = jax.grad(lambda hs: head_sum_loss(params["w0"], hs))(h_sum)  # (B, J)
-
-    def block_grad(block_i, zb_i):
+    def block_grad(block_i, zb_i, dl_dh):
         _, vjp = jax.vjp(lambda bl: client_h(bl, zb_i), block_i)
         return vjp(dl_dh)[0]
 
-    q0i = jax.vmap(block_grad)(params["blocks"], zb)              # (I, ...)
-
-    enc = new_ef = None
+    head_key = block_keys = None
     nbytes = None
+    d_head = d_block = None
     if codec is not None:
-        f0, unf0 = comm_codecs.flatten_tree(q00)
-        fb, unfb = comm_codecs.flatten_stacked(q0i)
-        if ef is None:
-            ef = {"w0": jnp.zeros_like(f0), "blocks": jnp.zeros_like(fb)}
+        d_head = comm_codecs.tree_flat_dim(params["w0"])
+        d_block = comm_codecs.tree_flat_dim(params["blocks"], stacked=True)
+        if ef is not None:
+            if not isinstance(ef, dict) or set(ef) != {"w0", "blocks"}:
+                raise ValueError(
+                    "feature_round: ef must be a dict with 'w0' and 'blocks' "
+                    f"residual streams (repro.comm ef_init/ef_init_stacked), "
+                    f"got {sorted(ef) if isinstance(ef, dict) else type(ef).__name__}")
+            _check_ef_shape("feature_round", "w0", ef["w0"], (d_head,))
+            _check_ef_shape("feature_round", "blocks", ef["blocks"],
+                            (data.num_clients, d_block))
         if codec_key is None:
             codec_key = jax.random.fold_in(key, 0xC0DEC)
-        k0 = jax.random.fold_in(codec_key, 0)
-        kb = jax.random.split(jax.random.fold_in(codec_key, 1), fb.shape[0])
-        enc0, h0, r0 = comm_ef.ef_roundtrip(codec, f0, ef["w0"], k0)
-        encb, hb, rb = jax.vmap(
-            lambda x, r, k: comm_ef.ef_roundtrip(codec, x, r, k))(
-                fb, ef["blocks"], kb)
-        q00, q0i = unf0(h0), unfb(hb)
-        new_ef = {"w0": r0, "blocks": rb}
-        enc = {"q_head": enc0, "q_blocks": encb}
-        nbytes = comm_accounting.feature_round_bytes(
-            f0.shape[0], [fb.shape[1]] * fb.shape[0], batch_size,
-            h.shape[-1], data.num_clients, codec)["up"]
+        head_key = jax.random.fold_in(codec_key, 0)
+        block_keys = jax.random.split(jax.random.fold_in(codec_key, 1),
+                                      data.num_clients)
 
-    grad_est = {"w0": q00 / batch_size,
-                "blocks": q0i / batch_size}
-    value_est = val / batch_size
-    uploads = {"h_exchange": h, "q_head": q00, "q_blocks": q0i,
-               "encoded": enc, "ef": new_ef, "upload_nbytes": nbytes}
+    s = topo.feature_sum(client_h, head_fn, block_grad, params["blocks"], zb,
+                         codec=codec, ef=ef, head_key=head_key,
+                         block_keys=block_keys)
+    if codec is not None:
+        nbytes = comm_accounting.feature_round_bytes(
+            d_head, [d_block] * data.num_clients, batch_size,
+            s.h.shape[-1], data.num_clients, codec)["up"]
+
+    grad_est = {"w0": s.q_head / batch_size,
+                "blocks": s.q_blocks / batch_size}
+    value_est = s.value / batch_size
+    uploads = {"h_exchange": s.h, "q_head": s.q_head, "q_blocks": s.q_blocks,
+               "encoded": s.encoded, "ef": s.ef, "upload_nbytes": nbytes}
     return grad_est, value_est, uploads
 
 

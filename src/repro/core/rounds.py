@@ -212,3 +212,30 @@ def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
             history["round_" + k] = jnp.concatenate([m[k] for m in per_round])
         history["round_t"] = jnp.arange(t_start, t0)
     return RunResult(extract_params(state), history, state)
+
+
+def run_feature_rounds(step_fn: Callable, state, fl, key, rounds: int,
+                       eval_fn: Optional[Callable] = None,
+                       eval_every: int = 0,
+                       extract_params: Optional[Callable] = None,
+                       t_start: int = 1, driver: str = "scan",
+                       topology=None) -> RunResult:
+    """Feature-based (vertical FL, Algorithms 3/4) counterpart of
+    :func:`run_rounds`: K vertical rounds — h-exchange, head + block
+    q-uploads, 1/B aggregation (eq. 16), SSCA update — compile to ONE
+    dispatch, with the codec/EF state riding the scan carry.
+
+    The only difference from `run_rounds` is carry placement: a feature
+    CommCarry's EF state is a *dict* of streams, and
+    ``topology.place_feature_state`` shards the per-client block residuals
+    (I, Pb) over the client axes while the single head stream stays
+    replicated — matching `feature_sum`'s out_specs so the carry never
+    reshards across the K scanned rounds.
+    """
+    if topology is not None:
+        place = getattr(topology, "place_feature_state", None)
+        if place is not None:
+            state = place(state)
+    return run_rounds(step_fn, state, fl, key, rounds, eval_fn=eval_fn,
+                      eval_every=eval_every, extract_params=extract_params,
+                      t_start=t_start, driver=driver)

@@ -34,6 +34,26 @@ Equivalence: sharded == local up to float reassociation (per-device partial
 sums + psum vs one tensordot); `tests/test_topology.py` pins the trajectory
 at atol 1e-5 with codec=int8 + error feedback + partial participation all
 enabled at once.
+
+The feature-based protocol (Algorithms 3/4, vertical FL, DESIGN.md §12) has
+a different structural invariant — the clients hold feature *blocks*, not
+sample shards, and the round is
+
+    client i computes h_i(ω_i, x_i)  →  h-exchange (every client sees all
+    h_j)  →  head gradient q_{f,0,0} from Σ h  →  per-client block gradients
+    q_{f,0,i} via the chain rule through the client's OWN h_i
+
+— realized here by the second contract, ``feature_sum``. The sharded
+realization places feature clients on the mesh's "model" axis
+(`launch.mesh.make_feature_mesh`) and implements the paper's step-4
+h-broadcast as a tiled `lax.all_gather`: every shard reassembles the full
+(I, B, J) h in canonical client order, so Σ_i h_i — and hence the head
+gradient, the backpropagated dl/dh, the block gradients, and the codec wire
+formats — is bit-identical to the local vmap reference, not merely close.
+The head computation is replicated (every client CAN compute it from the
+broadcast h's; a deployment would let the fastest one), the block gradients
+never leave their shard, and the codec + error-feedback roundtrip runs per
+shard exactly like the sample-based path.
 """
 from __future__ import annotations
 
@@ -76,6 +96,38 @@ def _compress_stacked(codec, uploads, ef, codec_keys, active):
     return enc, unflatten(u_hat), new_ef
 
 
+class FeatureSums(NamedTuple):
+    """Everything an Algorithm-3/4 vertical round produces at and across the
+    client boundary (the feature-based analog of :class:`ClientSums`)."""
+    h: object                 # per-client h_i, (I, B, J) — the h-exchange
+    h_sum: jnp.ndarray        # Σ_i h_i, (B, J), replicated
+    value: jnp.ndarray        # head batch value Σ_n f (scalar)
+    q_head: object            # q_{f,0,0} head upload (decoded if codec)
+    q_blocks: object          # q_{f,0,i} block uploads, (I, ...) pytree
+    encoded: object           # {"q_head","q_blocks"} wire formats (None dense)
+    ef: object                # {"w0": (P0,), "blocks": (I, Pb)} residuals
+
+
+def _compress_feature(codec, q_head, q_blocks, ef, head_key, block_keys):
+    """Client-boundary compression for the feature-based uploads: ONE head
+    stream (q_{f,0,0}, uploaded by the client that computed it) plus one
+    stream per client block (q_{f,0,i}), each through its own error-feedback
+    roundtrip. Identical code runs under local vmap and inside each
+    shard_map shard; under the sharded topology the head roundtrip is
+    replicated compute on bit-identical inputs (same key), so its wire
+    format agrees across every shard."""
+    f0, unf0 = comm_codecs.flatten_tree(q_head)
+    fb, unfb = comm_codecs.flatten_stacked(q_blocks)
+    if ef is None:
+        ef = {"w0": jnp.zeros_like(f0), "blocks": jnp.zeros_like(fb)}
+    enc0, h0, r0 = comm_ef.ef_roundtrip(codec, f0, ef["w0"], head_key)
+    encb, hb, rb = jax.vmap(
+        lambda x, r, k: comm_ef.ef_roundtrip(codec, x, r, k)
+    )(fb, ef["blocks"], block_keys)
+    return ({"q_head": enc0, "q_blocks": encb}, unf0(h0), unfb(hb),
+            {"w0": r0, "blocks": rb})
+
+
 def _weighted(weights, uploads, values):
     weighted = jax.tree.map(
         lambda u: jnp.tensordot(weights, u.astype(jnp.float32), axes=1),
@@ -104,7 +156,34 @@ class LocalTopology:
         return ClientSums(weighted=weighted, value=value, uploads=uploads,
                           values=values, encoded=enc, ef=new_ef)
 
+    def feature_sum(self, h_fn: Callable, head_fn: Callable,
+                    block_grad_fn: Callable, blocks, zb, *,
+                    codec=None, ef=None, head_key=None,
+                    block_keys=None) -> FeatureSums:
+        """Alg-3/4 information flow, all clients on one device.
+
+        h_fn(block_i, zb_i) -> (B, J) per-client h; head_fn(h_sum) ->
+        (value, q_head, dl_dh) closes over the head params and labels;
+        block_grad_fn(block_i, zb_i, dl_dh) -> q_{f,0,i}. blocks/zb are
+        (I, ...)-leading. This vmap path is the bit-level reference every
+        sharded result is pinned against."""
+        h = jax.vmap(h_fn)(blocks, zb)                       # (I, B, J)
+        h_sum = jnp.sum(h, axis=0)
+        value, q_head, dl_dh = head_fn(h_sum)
+        q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
+            blocks, zb, dl_dh)
+        enc = new_ef = None
+        if codec is not None:
+            enc, q_head, q_blocks, new_ef = _compress_feature(
+                codec, q_head, q_blocks, ef, head_key, block_keys)
+        return FeatureSums(h=h, h_sum=h_sum, value=value, q_head=q_head,
+                           q_blocks=q_blocks, encoded=enc, ef=new_ef)
+
     def place_state(self, state):
+        """No placement to do on a single device."""
+        return state
+
+    def place_feature_state(self, state):
         """No placement to do on a single device."""
         return state
 
@@ -192,6 +271,68 @@ class ShardedTopology:
         return ClientSums(weighted=weighted, value=value, uploads=uploads,
                           values=values, encoded=enc, ef=new_ef)
 
+    def place_feature_state(self, state):
+        """Pre-place a feature-based `CommCarry`'s EF residual dict: the
+        per-client block residuals (I, Pb) shard over the client axes, the
+        single head stream (P0,) stays replicated — matching feature_sum's
+        out_specs so the scan carry never reshards."""
+        if (not isinstance(state, comm_ef.CommCarry)
+                or not isinstance(state.ef, dict)):
+            return state
+        sh = self.client_sharding()
+        rep = jax.sharding.NamedSharding(self.mesh, P())
+        ef = {k: jax.device_put(v, sh if k == "blocks" else rep)
+              for k, v in state.ef.items()}
+        return state._replace(ef=ef)
+
+    def feature_sum(self, h_fn: Callable, head_fn: Callable,
+                    block_grad_fn: Callable, blocks, zb, *,
+                    codec=None, ef=None, head_key=None,
+                    block_keys=None) -> FeatureSums:
+        """Same contract as :meth:`LocalTopology.feature_sum`, with each
+        shard running its I/D resident feature clients and the paper's
+        step-4 h-broadcast realized as a tiled `lax.all_gather` over the
+        client axes: every shard reassembles the FULL (I, B, J) h in
+        canonical client order, so Σ_i h_i — and everything downstream of
+        it (head gradient, dl/dh, block gradients, codec wire formats) —
+        is bit-identical to the local reference. The head computation and
+        its codec roundtrip are replicated per shard (same inputs, same
+        key → same bits); block gradients and their EF residuals never
+        leave their shard."""
+        num_clients = jax.tree.leaves(blocks)[0].shape[0]
+        self._check_divisible(num_clients)
+        axes = self.axes
+        spec = P(axes)
+        has_codec = codec is not None
+        ef_spec = ({"w0": P(), "blocks": spec}
+                   if has_codec and ef is not None else P())
+        keys_spec = spec if block_keys is not None else P()
+        enc_spec = {"q_head": P(), "q_blocks": spec} if has_codec else P()
+        ef_out_spec = {"w0": P(), "blocks": spec} if has_codec else P()
+
+        def body(blocks_l, zb_l, ef_l, bkeys_l, hkey):
+            h_l = jax.vmap(h_fn)(blocks_l, zb_l)             # (I/D, B, J)
+            h_all = jax.lax.all_gather(h_l, axes, axis=0, tiled=True)
+            h_sum = jnp.sum(h_all, axis=0)
+            value, q_head, dl_dh = head_fn(h_sum)
+            q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
+                blocks_l, zb_l, dl_dh)
+            enc = new_ef = None
+            if has_codec:
+                enc, q_head, q_blocks, new_ef = _compress_feature(
+                    codec, q_head, q_blocks, ef_l, hkey, bkeys_l)
+            return h_l, h_sum, value, q_head, q_blocks, enc, new_ef
+
+        sharded = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec, spec, ef_spec, keys_spec, P()),
+            out_specs=(spec, P(), P(), P(), spec, enc_spec, ef_out_spec),
+            check_rep=False)
+        h, h_sum, value, q_head, q_blocks, enc, new_ef = sharded(
+            blocks, zb, ef, block_keys, head_key)
+        return FeatureSums(h=h, h_sum=h_sum, value=value, q_head=q_head,
+                           q_blocks=q_blocks, encoded=enc, ef=new_ef)
+
 
 LOCAL = LocalTopology()
 
@@ -220,3 +361,15 @@ def sharded_for(num_clients: int) -> ShardedTopology:
     while num_clients % d:
         d -= 1
     return ShardedTopology(make_client_mesh(d))
+
+
+def feature_sharded_for(num_clients: int) -> ShardedTopology:
+    """Feature-based analog of :func:`sharded_for`: the same best-divisor
+    device fit, but over a "model"-axis mesh (DESIGN.md §2/§12 — feature
+    clients ARE model shards; a 1-device fit still runs the shard_map +
+    all_gather path)."""
+    from repro.launch.mesh import make_feature_mesh
+    d = jax.device_count()
+    while num_clients % d:
+        d -= 1
+    return ShardedTopology(make_feature_mesh(d))

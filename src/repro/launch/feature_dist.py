@@ -1,86 +1,88 @@
-"""Distributed feature-based (vertical) FL: Algorithm 3 on the "model" mesh
-axis via shard_map — the faithful realization of DESIGN.md §2's mapping.
+"""DEPRECATED shim — the bespoke shard_map vertical-FL path now lives on the
+shared topology + scan engine.
 
-Each model-axis shard IS a feature client: it holds its parameter block ω_i
-and feature slice x_{n,i} locally; the paper's step-4 h-exchange is a psum
-over the "model" axis (each client contributes its partial pre-activation);
-the head gradient (step 5) is computed redundantly on every shard from the
-aggregated h (no distinguished "fastest client" needed on a synchronous
-mesh); step 6's block gradients never leave their shard. The server update
-(steps 7-8, closed form (24)+(18)) is elementwise: replicated for ω_0,
-shard-local for each ω_i.
+This module used to carry its own shard_map/mesh helpers for Algorithm 3 on
+the "model" mesh axis. That private fork is retired: the same mapping (each
+model-axis shard IS a feature client, DESIGN.md §2/§12) is realized by
+``repro.core.topology.ShardedTopology.feature_sum`` — with the step-4
+h-exchange as a tiled all_gather instead of a psum, so sharded == local is
+bit-exact — driven by ``repro.core.rounds.run_feature_rounds`` and
+``repro.core.algorithms.algorithm3/4``. Mesh construction moved to
+``repro.launch.mesh.make_feature_mesh``; the training CLI is
+``repro.launch.train --mode feature``.
 
-Per-round bytes over the "model" axis: B·J floats (the h psum) + the ω_0
-gradient reduction — exactly the paper's communication-load accounting for
-Algorithm 3 (Remark 3/4).
+The two public entry points below keep their historical signatures and
+semantics (mean-scaled gradients, ~10 checkpoint losses) as thin wrappers
+over the shared engine, so existing callers keep working; new code should
+use the shared stack directly.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
-from repro.core import optimizer
+from repro.core.topology import ShardedTopology
+
+
+def _deprecated(name: str, repl: str):
+    warnings.warn(
+        f"repro.launch.feature_dist.{name} is deprecated; use {repl} "
+        "(the shared topology + scan engine, DESIGN.md §12)",
+        DeprecationWarning, stacklevel=3)
 
 
 def make_feature_round(mesh, head_loss_from_h, client_h):
-    """Returns round_fn(w0, blocks, zb, yb) -> (grad_w0, grad_blocks, loss).
+    """Returns round_fn(w0, blocks, zb, yb) -> (grad_w0, grad_blocks, loss)
+    with MEAN-loss scaling (the historical contract of this module).
 
-    blocks: (I, ...) client parameter blocks, sharded over "model" (I = axis
-    size); zb: (I, B, P_i) per-client feature slices, same sharding; yb:
-    (B, L) labels, replicated (supervised vertical FL: all clients hold y).
+    Deprecated: build a `ShardedTopology(mesh, axes=("model",))` and call
+    `fed.feature_round(..., topology=...)` instead (1/B-scaled eq.-16
+    semantics, codec/EF support, uploads surface).
     """
+    _deprecated("make_feature_round",
+                "repro.core.fed.feature_round(topology=...)")
+    topo = ShardedTopology(mesh, axes=("model",))
 
-    def round_local(w0, blocks, zb, yb):
-        # step 4: local partial pre-activation, exchanged via psum
-        h_local = client_h(blocks[0], zb[0])                  # (B, J)
-        h_sum = jax.lax.psum(h_local, "model")
+    def round_fn(w0, blocks, zb, yb):
+        def head_fn(h_sum):
+            def head_mean_loss(w0_, h_):
+                return jnp.mean(head_loss_from_h(w0_, h_, yb))
 
-        # step 5: head stats from aggregated h only (replicated compute)
-        def head_mean_loss(w0_, h_):
-            return jnp.mean(head_loss_from_h(w0_, h_, yb))
+            loss, gw0 = jax.value_and_grad(head_mean_loss)(w0, h_sum)
+            dl_dh = jax.grad(lambda h_: head_mean_loss(w0, h_))(h_sum)
+            return loss, gw0, dl_dh
 
-        loss, gw0 = jax.value_and_grad(head_mean_loss)(w0, h_sum)
+        def block_grad(block_i, zb_i, dl_dh):
+            _, vjp = jax.vjp(lambda bl: client_h(bl, zb_i), block_i)
+            return vjp(dl_dh)[0]
 
-        # step 6: chain rule through this client's own h_i — stays local
-        dl_dh = jax.grad(lambda h_: head_mean_loss(w0, h_))(h_sum)
-        _, vjp = jax.vjp(lambda bl: client_h(bl, zb[0]), blocks[0])
-        gblock = vjp(dl_dh)[0][None]                          # (1, ...)
-        return gw0, gblock, loss
+        s = topo.feature_sum(client_h, head_fn, block_grad, blocks, zb)
+        return s.q_head, s.q_blocks, s.value
 
-    return shard_map(
-        round_local, mesh=mesh,
-        in_specs=(P(), P("model"), P("model"), P()),
-        out_specs=(P(), P("model"), P()),
-        check_rep=False)
+    return round_fn
 
 
 def train_feature_distributed(mesh, head_loss_from_h, client_h, w0, blocks,
                               feature_blocks, labels, fl, rounds: int, key):
-    """Runs Algorithm 3 with ω_i resident on their model-axis shards."""
-    round_fn = make_feature_round(mesh, head_loss_from_h, client_h)
-    params = {"w0": w0, "blocks": blocks}
-    state = optimizer.ssca_init(params)
-    n = labels.shape[0]
+    """Runs Algorithm 3 with ω_i resident on their model-axis shards.
+    Returns (params, ~10 checkpoint batch-loss floats), as always.
 
-    @jax.jit
-    def step(state, k):
-        idx = jax.random.randint(k, (fl.batch_size,), 0, n)
-        zb = jnp.take(feature_blocks, idx, axis=1)
-        yb = jnp.take(labels, idx, axis=0)
-        gw0, gblocks, loss = round_fn(state.params["w0"],
-                                      state.params["blocks"], zb, yb)
-        grads = {"w0": gw0, "blocks": gblocks}
-        return optimizer.ssca_step(state, grads, fl), loss
+    Deprecated: call `repro.core.algorithms.algorithm3(...,
+    topology=ShardedTopology(mesh, axes=("model",)))` directly — scan-
+    compiled rounds, full per-round history, codec support.
+    """
+    _deprecated("train_feature_distributed",
+                "repro.core.algorithms.algorithm3(topology=...)")
+    from repro.core import algorithms, fed
 
-    losses = []
-    with mesh:
-        for t in range(rounds):
-            key, sub = jax.random.split(key)
-            state, loss = step(state, sub)
-            if (t + 1) % max(rounds // 10, 1) == 0:
-                losses.append(float(loss))
-    return state.params, losses
+    topo = ShardedTopology(mesh, axes=("model",))
+    data = fed.FeatureFedData(feature_blocks, labels)
+    r = algorithms.algorithm3(head_loss_from_h, client_h,
+                              {"w0": w0, "blocks": blocks}, data, fl, rounds,
+                              key, eval_every=0, topology=topo)
+    ck = max(rounds // 10, 1)
+    le = r.history["round_loss_est"]
+    losses = [float(le[t]) for t in range(ck - 1, rounds, ck)]
+    return r.params, losses

@@ -51,6 +51,14 @@ def make_client_mesh(num_devices: int | None = None, axis: str = "data"):
     return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
 
 
+def make_feature_mesh(num_devices: int | None = None):
+    """1-D "model"-axis mesh for the sharded feature-based topology
+    (core/topology.py feature_sum, DESIGN.md §12): each model-axis shard IS
+    a vertical-FL feature client holding its ω_i block and feature slice.
+    Same device policy as `make_client_mesh`."""
+    return make_client_mesh(num_devices, axis="model")
+
+
 def data_axes(mesh) -> tuple:
     """The axes a global-batch dimension shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

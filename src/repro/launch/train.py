@@ -24,10 +24,22 @@ core/topology.py's shard_map engine, each shard computes its local gradient
 aggregation is a weighted psum over the mesh. ``--topology local`` (default)
 keeps the single-dispatch pjit picture unchanged.
 
+Feature-based (vertical FL) mode (DESIGN.md §12): ``--mode feature`` runs
+Algorithm 3 — or Algorithm 4 with ``--constrained`` (min ‖ω‖² s.t.
+mean-loss <= ``--cost-limit``, formulation (40)) — on a synthetic
+classification task with the features split into ``--clients`` vertical
+blocks. ``--topology sharded`` places each feature client on its own
+"model"-axis shard (`launch.mesh.make_feature_mesh`) with the h-exchange
+as a tiled all_gather; the codec flags compress the head + block q-uploads
+exactly as in core/algorithms.py.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
           [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
           [--codec-impl pallas] [--topology local|sharded] [--shards 8]
+      PYTHONPATH=src python -m repro.launch.train --mode feature \
+          --clients 4 --steps 200 [--constrained --cost-limit 1.2] \
+          [--topology sharded] [--codec int8] [--driver scan|loop]
 """
 from __future__ import annotations
 
@@ -245,9 +257,97 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
     return state, logs
 
 
+# ---------------------------------------------------------------------------
+# feature-based (vertical FL) training driver — Algorithms 3/4 on the shared
+# topology + scan engine (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def feature_train_loop(*, clients: int = 4, rounds: int = 200,
+                       batch: int = 64, features: int = 128,
+                       classes: int = 10, hidden: int = 32, n: int = 8000,
+                       constrained: bool = False, cost_limit: float = 1.2,
+                       topology: str = "local", codec: Optional[str] = None,
+                       topk_frac: float = 0.01, codec_impl: str = "ref",
+                       driver: str = "scan", log_every: int = 20,
+                       seed: int = 0, fl: Optional[FLConfig] = None):
+    """Vertical-FL driver: synthetic classification, features split into
+    `clients` blocks, MLP head composition (models/mlp.py), Algorithm 3 or
+    (constrained) Algorithm 4 via run_feature_rounds. Returns the RunResult.
+    """
+    from repro.core import algorithms, fed
+    from repro.core.rounds import unwrap_comm
+    from repro.data.synthetic import classification_dataset
+    from repro.models import mlp
+
+    key = jax.random.PRNGKey(seed)
+    (z, y, _), _ = classification_dataset(key, n=n, num_features=features,
+                                          num_classes=classes, test_n=10,
+                                          noise=4.0)
+    data = fed.partition_features(z, y, clients)
+    pi = data.feature_blocks.shape[-1]
+    params0 = {"w0": jax.random.normal(key, (classes, hidden)) * 0.2,
+               "blocks": jax.random.normal(jax.random.fold_in(key, 1),
+                                           (clients, hidden, pi)) * 0.2}
+    fl = fl or FLConfig(batch_size=batch, a1=0.9, a2=0.5, alpha_rho=0.1,
+                        alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5,
+                        mode="feature", constrained=constrained,
+                        cost_limit=cost_limit, penalty_c=1e4)
+    topo = (topology_lib.feature_sharded_for(clients)
+            if topology == "sharded" else None)
+    codec_obj = make_codec(codec, topk_frac=topk_frac, impl=codec_impl)
+
+    def eval_fn(p, s):
+        hsum = sum(mlp.client_h(p["blocks"][i], data.feature_blocks[i])
+                   for i in range(clients))
+        loss = float(jnp.mean(mlp.per_sample_loss_from_h(p["w0"], hsum, y)))
+        m = {"loss": loss}
+        if constrained:
+            m["nu"], m["slack"] = float(s_nu(s)), float(s_slack(s))
+        return m
+
+    def s_nu(s):
+        return unwrap_comm(s).nu
+
+    def s_slack(s):
+        return unwrap_comm(s).slack
+
+    alg = algorithms.algorithm4 if constrained else algorithms.algorithm3
+    wall0 = time.time()
+    result = alg(mlp.per_sample_loss_from_h, mlp.client_h, params0, data, fl,
+                 rounds, jax.random.fold_in(key, 2), eval_fn=eval_fn,
+                 eval_every=log_every, driver=driver, codec=codec_obj,
+                 topology=topo)
+    for i, r in enumerate(result.history["round"]):
+        line = {k: float(v[i]) for k, v in result.history.items()
+                if not k.startswith("round")}
+        line["round"] = int(r)
+        print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in line.items()), flush=True)
+    shards = topo.num_shards if topo is not None else 1
+    print(f"done: {rounds} rounds, {shards} client shard(s), "
+          f"{time.time() - wall0:.1f}s", flush=True)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model zoo arch (required for --mode sample)")
+    ap.add_argument("--mode", choices=("sample", "feature"),
+                    default="sample",
+                    help="sample = horizontal FL on a zoo model (Alg 1/2); "
+                         "feature = vertical FL, features split across "
+                         "clients (Alg 3/4, DESIGN.md §12)")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="feature-mode vertical client count")
+    ap.add_argument("--features", type=int, default=128)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--cost-limit", type=float, default=1.2,
+                    help="U in min ‖ω‖² s.t. loss <= U (feature mode "
+                         "--constrained)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -270,6 +370,18 @@ def main():
                          "(default: all host devices; must divide --batch)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.mode == "feature":
+        feature_train_loop(clients=args.clients, rounds=args.steps,
+                           batch=args.batch, features=args.features,
+                           classes=args.classes, hidden=args.hidden,
+                           n=args.n, constrained=args.constrained,
+                           cost_limit=args.cost_limit,
+                           topology=args.topology, codec=args.codec,
+                           topk_frac=args.topk_frac,
+                           codec_impl=args.codec_impl, driver=args.driver)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for --mode sample")
     train_loop(args.arch, args.steps, args.batch, args.seq, smoke=args.smoke,
                constrained=args.constrained, ckpt_path=args.ckpt,
                driver=args.driver, codec=args.codec,

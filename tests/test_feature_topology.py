@@ -1,0 +1,411 @@
+"""Feature-based (vertical FL) topology invariants (DESIGN.md §12): the
+sharded feature engine — each client on its own "model"-axis shard, the
+paper's Alg-3 step-4 h-exchange realized as a tiled `lax.all_gather` —
+reproduces the local vmap reference at atol 1e-5 for Algorithms 3 AND 4,
+dense and with the int8 + error-feedback composition, and the compressed
+wire formats agree bit-for-bit across topologies (the all_gather reassembles
+the full h in canonical client order on every shard, so h_sum, the head
+gradient, and each client's block gradient see identical inputs).
+
+One deliberate exception: Algorithm 4's ν comes from the Lemma-1 closed
+form (sqrt/divides on surrogate aggregates up to penalty_c = 1e4), whose
+float reassociation differs once collectives are in the graph — ν is
+compared relatively (rtol 1e-3) while loss/slack trajectories hold the
+absolute 1e-5/1e-4 pins.
+
+On a single-device run (tier-1 CI) the mesh degenerates to one shard, which
+still exercises the shard_map + all_gather code path; the multi-device CI
+job (XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the same
+tests with real client distribution plus the 8-device-only case below.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommCarry, ef_init, ef_init_stacked, make_codec
+from repro.comm.accounting import all_gather_axis_bytes
+from repro.configs.base import FLConfig
+from repro.core import algorithms, baselines, fed
+from repro.core.topology import (LocalTopology, ShardedTopology,
+                                 feature_sharded_for)
+from repro.launch.mesh import make_feature_mesh
+from repro.models import mlp
+
+P, J, L = 16, 8, 3
+I = 4                                  # feature clients; divisible by 1/2/4
+B = 20
+D_HEAD = L * J                         # flattened w0 stream
+D_BLOCK = J * (P // I)                 # flattened per-client block stream
+
+
+def _topo(num_clients: int = I) -> ShardedTopology:
+    """Most devices that divide the client count (4 in the multi-device CI
+    job, 1 in tier-1 — still the shard_map + all_gather path)."""
+    return feature_sharded_for(num_clients)
+
+
+def _data(key, n=400):
+    z = jax.random.normal(key, (n, P))
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, L)
+    return fed.partition_features(z, jax.nn.one_hot(lab, L), I)
+
+
+def _params0(key):
+    return {"w0": jax.random.normal(key, (L, J)) * 0.2,
+            "blocks": jax.random.normal(jax.random.fold_in(key, 1),
+                                        (I, J, P // I)) * 0.2}
+
+
+def _fl(**kw):
+    base = dict(batch_size=B, a1=0.9, a2=0.5, alpha_rho=0.1,
+                alpha_gamma=0.6, tau=0.2)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _ef0():
+    return {"w0": ef_init(D_HEAD), "blocks": ef_init_stacked(I, D_BLOCK)}
+
+
+def _assert_trees_close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def _round(params, data, codec=None, ef=None, topology=None):
+    return fed.feature_round(params, data, jax.random.PRNGKey(2), B,
+                             mlp.per_sample_loss_from_h, mlp.client_h,
+                             codec=codec, ef=ef, topology=topology)
+
+
+# ---------------------------------------------------------------------------
+# single-round equivalence (the engine itself)
+# ---------------------------------------------------------------------------
+
+
+def test_feature_round_sharded_matches_local_dense():
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    g_l, v_l, up_l = _round(params, data)
+    g_s, v_s, up_s = _round(params, data, topology=_topo())
+    # the all_gather reassembles the identical h every shard saw locally
+    np.testing.assert_array_equal(np.asarray(up_l["h_exchange"]),
+                                  np.asarray(up_s["h_exchange"]))
+    _assert_trees_close(g_l, g_s, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(v_l), float(v_s), rtol=1e-6)
+    assert up_s["h_exchange"].shape == (I, B, J)
+
+
+def test_feature_round_sharded_int8_wire_format_matches_local_exactly():
+    """Head/block codec keys are derived identically for every topology and
+    each shard quantizes the same gradients, so the encoded wire values
+    (int8 levels + scales) agree bit-for-bit — the compression boundary
+    does not move when the clients do."""
+    data = _data(jax.random.PRNGKey(3))
+    params = _params0(jax.random.PRNGKey(1))
+    codec = make_codec("int8")
+    _, _, up_l = _round(params, data, codec=codec)
+    _, _, up_s = _round(params, data, codec=codec, topology=_topo())
+    for stream in ("q_head", "q_blocks"):
+        np.testing.assert_array_equal(
+            np.asarray(up_l["encoded"][stream].values),
+            np.asarray(up_s["encoded"][stream].values))
+        np.testing.assert_allclose(
+            np.asarray(up_l["encoded"][stream].scales),
+            np.asarray(up_s["encoded"][stream].scales), rtol=1e-6)
+    for stream in ("w0", "blocks"):
+        np.testing.assert_allclose(np.asarray(up_l["ef"][stream]),
+                                   np.asarray(up_s["ef"][stream]), atol=1e-6)
+
+
+def test_feature_round_validation_parity_with_sample_round():
+    """Both round functions reject malformed codec/EF arguments with the
+    same message shapes (the shared _check_* helpers)."""
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    z = jax.random.normal(jax.random.PRNGKey(4), (400, P))
+    y = jax.nn.one_hot(jnp.zeros(400, jnp.int32), L)
+    sdata = fed.partition_samples(z, y, I)
+    sparams = mlp.init(jax.random.PRNGKey(1), P, J, L)
+
+    # EF residuals without a codec are rejected, not silently dropped
+    with pytest.raises(ValueError, match="feature_round: .*without codec="):
+        _round(params, data, ef=_ef0())
+    with pytest.raises(ValueError, match="sample_round: .*without codec="):
+        fed.sample_round(mlp.per_sample_loss, sparams, sdata,
+                         jax.random.PRNGKey(2), B, ef=jnp.zeros((I, 4)))
+
+    codec = make_codec("int8")
+    # feature EF must be the two-stream dict
+    with pytest.raises(ValueError, match="'w0' and 'blocks'"):
+        _round(params, data, codec=codec, ef=ef_init(D_HEAD))
+    with pytest.raises(ValueError, match="'w0' and 'blocks'"):
+        _round(params, data, codec=codec, ef={"w0": ef_init(D_HEAD)})
+
+    # per-stream shape mismatches name the stream and the expected shape
+    bad = _ef0()
+    bad["blocks"] = ef_init_stacked(I + 1, D_BLOCK)
+    with pytest.raises(ValueError,
+                       match=r"stream 'blocks' have shape .* expected"):
+        _round(params, data, codec=codec, ef=bad)
+    bad = _ef0()
+    bad["w0"] = ef_init(D_HEAD + 1)
+    with pytest.raises(ValueError,
+                       match=r"stream 'w0' have shape .* expected"):
+        _round(params, data, codec=codec, ef=bad)
+    with pytest.raises(ValueError,
+                       match=r"stream 'q_grad' have shape .* expected"):
+        fed.sample_round(mlp.per_sample_loss, sparams, sdata,
+                         jax.random.PRNGKey(2), B, codec=codec,
+                         ef=jnp.zeros((I + 1, 4)))
+
+
+# ---------------------------------------------------------------------------
+# trajectory equality: Algorithms 3 and 4, dense and fully composed
+# ---------------------------------------------------------------------------
+
+
+def test_algorithm3_sharded_matches_local_trajectory():
+    data = _data(jax.random.PRNGKey(0))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl()
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0)
+    r_l = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 50, **kw)
+    r_s = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 50, topology=_topo(), **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    _assert_trees_close(r_s.params, r_l.params, atol=1e-5)
+
+
+def test_algorithm3_sharded_matches_local_int8_ef():
+    """The codec + error-feedback composition through the all_gather — the
+    refactor's risk surface for the vertical stack."""
+    data = _data(jax.random.PRNGKey(3))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl()
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0,
+              codec=make_codec("int8"))
+    r_l = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, **kw)
+    r_s = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, topology=_topo(), **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    # params tolerate one int8 quant-level flip (see test_topology.py)
+    _assert_trees_close(r_s.params, r_l.params, atol=1e-4)
+
+
+def test_algorithm4_sharded_matches_local_trajectory():
+    data = _data(jax.random.PRNGKey(4))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl(constrained=True, cost_limit=1.0, penalty_c=1e4)
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0)
+    r_l = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, **kw)
+    r_s = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, topology=_topo(), **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_slack"]),
+                               np.asarray(r_l.history["round_slack"]),
+                               atol=1e-4)
+    # Lemma-1 ν reassociates under collectives; its scale reaches penalty_c
+    np.testing.assert_allclose(np.asarray(r_s.history["round_nu"]),
+                               np.asarray(r_l.history["round_nu"]),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_algorithm4_sharded_matches_local_int8_ef():
+    """Algorithm 4 with the full int8 + EF composition (the acceptance
+    criterion's 'including int8+EF' clause)."""
+    data = _data(jax.random.PRNGKey(5))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl(constrained=True, cost_limit=1.0, penalty_c=1e4)
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0,
+              codec=make_codec("int8"))
+    r_l = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, **kw)
+    r_s = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 40, topology=_topo(), **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_nu"]),
+                               np.asarray(r_l.history["round_nu"]),
+                               rtol=1e-3, atol=1e-2)
+    _assert_trees_close(r_s.params, r_l.params, atol=1e-4)
+
+
+def test_algorithm3_sharded_matches_local_topk_ef():
+    """The biased top-k codec that EF must repair, across topologies."""
+    data = _data(jax.random.PRNGKey(6))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl()
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0,
+              codec=make_codec("topk", topk_frac=0.3))
+    r_l = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 30, **kw)
+    r_s = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 30, topology=_topo(), **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    _assert_trees_close(r_s.params, r_l.params, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scan driver == per-round Python loop (run_feature_rounds)
+# ---------------------------------------------------------------------------
+
+
+def test_feature_scan_driver_matches_loop():
+    data = _data(jax.random.PRNGKey(0))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl()
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0,
+              codec=make_codec("int8"), topology=_topo())
+    r_scan = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                   params0, data, fl, 30, **kw)
+    r_loop = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                   params0, data, fl, 30, driver="loop", **kw)
+    np.testing.assert_allclose(np.asarray(r_scan.history["round_loss_est"]),
+                               np.asarray(r_loop.history["round_loss_est"]),
+                               atol=1e-5)
+    _assert_trees_close(r_scan.params, r_loop.params, atol=1e-4)
+
+
+def test_feature_scan_driver_matches_loop_constrained():
+    data = _data(jax.random.PRNGKey(4))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl(constrained=True, cost_limit=1.0, penalty_c=1e4)
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0)
+    r_scan = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                   params0, data, fl, 30, **kw)
+    r_loop = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                   params0, data, fl, 30, driver="loop", **kw)
+    for k in ("round_loss_est", "round_slack"):
+        np.testing.assert_allclose(np.asarray(r_scan.history[k]),
+                                   np.asarray(r_loop.history[k]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_scan.history["round_nu"]),
+                               np.asarray(r_loop.history["round_nu"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# accounting + state placement
+# ---------------------------------------------------------------------------
+
+
+def test_feature_axis_bytes_metric_zero_local_positive_sharded():
+    data = _data(jax.random.PRNGKey(0))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl()
+    topo = _topo()
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0)
+    r_l = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 5, **kw)
+    r_s = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 5, topology=topo, **kw)
+    assert float(r_l.history["round_axis_bytes"][0]) == 0.0
+    expect = all_gather_axis_bytes(I * B * J, topo.num_shards)
+    assert float(r_s.history["round_axis_bytes"][0]) == float(expect)
+    if topo.num_shards > 1:
+        assert expect > 0
+
+
+def test_all_gather_axis_bytes_closed_form():
+    assert all_gather_axis_bytes(100, 1) == 0
+    assert all_gather_axis_bytes(100, 4) == 3 * 4 * 100
+    assert all_gather_axis_bytes(100, 8) == 7 * 4 * 100
+
+
+def test_place_feature_state_shards_block_residuals():
+    topo = _topo()
+    state = CommCarry(opt=None, ef=_ef0())
+    placed = topo.place_feature_state(state)
+    assert placed.ef["blocks"].shape == (I, D_BLOCK)
+    assert len(placed.ef["blocks"].sharding.device_set) == topo.num_shards
+    # the single head stream is replicated, not sharded
+    assert placed.ef["w0"].shape == (D_HEAD,)
+    # non-CommCarry states pass through untouched
+    assert topo.place_feature_state("opaque") == "opaque"
+    assert LocalTopology().place_feature_state(state) is state
+
+
+def test_feature_ef_carry_survives_scan_sharded():
+    data = _data(jax.random.PRNGKey(3))
+    params0 = _params0(jax.random.PRNGKey(1))
+    topo = _topo()
+    r = algorithms.algorithm3(mlp.per_sample_loss_from_h, mlp.client_h,
+                              params0, data, _fl(), 10,
+                              key=jax.random.PRNGKey(2), eval_every=0,
+                              codec=make_codec("int8"), topology=topo)
+    ef = r.final_state.ef
+    assert set(ef) == {"w0", "blocks"}
+    assert ef["blocks"].shape == (I, D_BLOCK)
+    assert len(ef["blocks"].sharding.device_set) == topo.num_shards
+
+
+# ---------------------------------------------------------------------------
+# constrained baselines ride the same engine
+# ---------------------------------------------------------------------------
+
+
+def test_feature_baselines_sharded_match_local():
+    data = _data(jax.random.PRNGKey(7))
+    params0 = _params0(jax.random.PRNGKey(1))
+    fl = _fl(constrained=True, cost_limit=1.0, penalty_c=1e4)
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0)
+    for run in (
+            lambda topo: baselines.feature_frank_wolfe(
+                mlp.per_sample_loss_from_h, mlp.client_h, params0, data, fl,
+                baselines.FWConfig(), 15, topology=topo, **kw),
+            lambda topo: baselines.feature_dual_decomposition(
+                mlp.per_sample_loss_from_h, mlp.client_h, params0, data, fl,
+                baselines.DualConfig(), 15, topology=topo, **kw)):
+        r_l, r_s = run(None), run(_topo())
+        loss = np.asarray(r_l.history["round_loss_est"])
+        assert np.isfinite(loss).all()
+        np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                                   loss, atol=1e-5)
+        _assert_trees_close(r_s.params, r_l.params, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# multi-device-only coverage (the dedicated CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 (multi-device CI job)")
+def test_eight_device_eight_feature_clients_full_composition():
+    """One feature client per device on the full 8-device mesh, Algorithm 4
+    with int8 + EF — the acceptance-criterion configuration at real
+    distribution."""
+    I8 = 8
+    z = jax.random.normal(jax.random.PRNGKey(9), (640, I8 * 4))
+    lab = jax.random.randint(jax.random.PRNGKey(10), (640,), 0, L)
+    data = fed.partition_features(z, jax.nn.one_hot(lab, L), I8)
+    params0 = {"w0": jax.random.normal(jax.random.PRNGKey(1), (L, J)) * 0.2,
+               "blocks": jax.random.normal(jax.random.PRNGKey(11),
+                                           (I8, J, 4)) * 0.2}
+    topo = ShardedTopology(make_feature_mesh(8), axes=("model",))
+    assert topo.num_shards == 8
+    fl = _fl(constrained=True, cost_limit=1.0, penalty_c=1e4)
+    kw = dict(key=jax.random.PRNGKey(2), eval_every=0,
+              codec=make_codec("int8"))
+    r_l = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 30, **kw)
+    r_s = algorithms.algorithm4(mlp.per_sample_loss_from_h, mlp.client_h,
+                                params0, data, fl, 30, topology=topo, **kw)
+    np.testing.assert_allclose(np.asarray(r_s.history["round_loss_est"]),
+                               np.asarray(r_l.history["round_loss_est"]),
+                               atol=1e-5)
+    _assert_trees_close(r_s.params, r_l.params, atol=1e-4)

@@ -11,7 +11,8 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.core import schedules
-from repro.core.solvers import (lemma1_nu, solve_constrained_multi,
+from repro.core.solvers import (kkt_best_nu, kkt_residuals, lemma1_nu,
+                                solve_constrained_multi,
                                 solve_constrained_single, solve_unconstrained)
 from repro.core.surrogate import (QuadSurrogate, init_surrogate, surrogate_grad,
                                   surrogate_value, tree_dot, tree_l2sq,
@@ -87,6 +88,68 @@ def test_lemma1_matches_bisection():
         nu_l = float(lemma1_nu(tree_l2sq(g1), jnp.float32(d1), tau, c))
         sol = solve_constrained_single(jnp.zeros(32), 1.0, cons, tau, c)
         assert abs(nu_l - float(sol.nu[0])) < 1e-2 * (1 + nu_l), (d1, nu_l, sol.nu)
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.floats(0.05, 1.0),
+       st.floats(0.05, 1.0))
+def test_multi_constraint_kkt_randomized_active_sets(seed, m, tau, tau0):
+    """Property: solve_constrained_multi's dual ascent lands on a point
+    satisfying the KKT system of Problem 5 for ANY mix of active and
+    inactive constraints — constraint offsets d_m ∈ [-2, 2] randomize which
+    constraints bind at the solution (d_m << 0 inactive, d_m >> 0 active or
+    slack-saturated). Checked with the same kkt_residuals yardstick that
+    benchmarks/feature_bench.py scores Algorithm 4 with."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, m + 2)
+    g0 = jax.random.normal(keys[0], (8,))
+    gs = [jax.random.normal(k, (8,)) for k in keys[1:m + 1]]
+    ds = jax.random.uniform(keys[m + 1], (m,), minval=-2.0, maxval=2.0)
+    c = 10.0
+    cons = [QuadSurrogate(d=ds[j], g=gs[j]) for j in range(m)]
+    sol = solve_constrained_multi(g0, tau0, cons, tau, c, iters=3000)
+    w = sol.omega_bar
+    nu = np.asarray(sol.nu)
+    slack = np.asarray(sol.slack)
+    fvals = np.asarray([float(ds[j] + gs[j] @ w + tau * (w @ w))
+                        for j in range(m)])
+    nu_scale = 1.0 + float(nu.sum())
+
+    # stationarity via the shared residual helper: ∇f0 + Σ ν_m ∇F_m ≈ 0
+    # (each surrogate's curvature contributes 2τω; f0's contributes 2τ0ω)
+    obj_grad = g0 + 2 * tau0 * w
+    cons_grads = [gs[j] + 2 * tau * w for j in range(m)]
+    res = kkt_residuals(obj_grad, cons_grads, fvals - slack, nu)
+    assert float(res["stationarity"]) < 2e-2 * nu_scale
+    # primal feasibility w.r.t. the solved slack
+    assert float(res["violation"]) < 1e-3
+    # dual feasibility: 0 <= nu_m <= c
+    assert (nu >= -1e-6).all() and (nu <= c + 1e-6).all()
+    # complementary slackness, both directions
+    for j in range(m):
+        if slack[j] > 1e-4:               # paid slack => multiplier at cap
+            assert abs(nu[j] - c) < 1e-2
+        if fvals[j] < slack[j] - 1e-2:    # strictly inactive => nu ~ 0
+            assert nu[j] < 1e-2 * nu_scale
+
+
+def test_kkt_residuals_and_best_nu_closed_form():
+    """kkt_residuals on a hand-built KKT point is ~0; kkt_best_nu recovers
+    the stationarity-minimizing multiplier and clips at 0."""
+    g = jnp.array([1.0, -2.0, 0.5])
+    # point where obj_grad = -2 * cons_grad: best nu is exactly 2
+    r = kkt_residuals(-2.0 * g, [g], jnp.array([0.0]), jnp.array([2.0]))
+    assert float(r["stationarity"]) < 1e-6
+    assert float(r["violation"]) == 0.0
+    assert float(r["comp_slack"]) == 0.0
+    np.testing.assert_allclose(float(kkt_best_nu(-2.0 * g, g)), 2.0,
+                               rtol=1e-6)
+    # anti-aligned gradients would need nu < 0 — clipped to the valid cone
+    assert float(kkt_best_nu(3.0 * g, g)) == 0.0
+    # violation and comp_slack pick up positive constraint values
+    r = kkt_residuals(jnp.zeros(3), [g], jnp.array([0.5]), jnp.array([4.0]))
+    assert float(r["violation"]) == 0.5
+    np.testing.assert_allclose(float(r["comp_slack"]), 2.0, rtol=1e-6)
 
 
 def test_surrogate_recursion_matches_closed_form():
