@@ -14,7 +14,6 @@ Usage:  PYTHONPATH=src python -m benchmarks.comm_bench [--smoke]
             [--rounds 300] [--n 20000] [--json BENCH_comm.json]
 """
 import argparse
-import json
 import time
 
 
@@ -70,9 +69,8 @@ def comm_tradeoff(rounds: int = 300, n: int = 20_000, clients: int = 10,
               f"ratio={res['compression_ratio']:.2f}x", flush=True)
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=1)
-        print(f"# wrote {json_path}", flush=True)
+        from repro.obs import sinks as obs_sinks
+        obs_sinks.bench_json(json_path, results)
 
     # acceptance claim-check (ISSUE 2): int8 within 2% at >= 3.5x fewer bytes
     dense = next(r for r in results if r["codec"] == "none")

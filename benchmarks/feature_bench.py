@@ -40,7 +40,6 @@ Usage:  PYTHONPATH=src python -m benchmarks.feature_bench [--smoke]
             [--json BENCH_feature.json]
 """
 import argparse
-import json
 import os
 import sys
 import time
@@ -207,9 +206,8 @@ def feature_constrained_bench(rounds: int = 600, clients: int = 4,
           f"traj_max_abs_diff={traj_diff:.2e}", flush=True)
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(result, f, indent=1)
-        print(f"# wrote {json_path}", flush=True)
+        from repro.obs import sinks as obs_sinks
+        obs_sinks.bench_json(json_path, result)
 
     # hard invariants on every host
     np.testing.assert_allclose(

@@ -14,9 +14,11 @@ def main() -> None:
                     help="substring filter on benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import extensions_bench, figures, kernels_bench, rounds_bench
+    from benchmarks import (extensions_bench, figures, kernels_bench,
+                            obs_bench, rounds_bench)
     benches = [
         ("rounds_scan_vs_loop", rounds_bench.rounds_scan_vs_loop),
+        ("obs_stream_overhead", obs_bench.obs_overhead),
         ("fig1_unconstrained_sample_based", figures.fig1_unconstrained_sample_based),
         ("fig1ef_constrained_sample_based", figures.fig1ef_constrained_sample_based),
         ("fig2_feature_based", figures.fig2_feature_based),

@@ -30,7 +30,6 @@ Usage:  PYTHONPATH=src python -m benchmarks.shard_bench [--smoke]
             [--json BENCH_shard.json]
 """
 import argparse
-import json
 import os
 import sys
 import time
@@ -126,9 +125,8 @@ def shard_tradeoff(rounds: int = 120, clients: int = 64, devices: int = 8,
           flush=True)
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(result, f, indent=1)
-        print(f"# wrote {json_path}", flush=True)
+        from repro.obs import sinks as obs_sinks
+        obs_sinks.bench_json(json_path, result)
 
     # trajectory equality is the hard invariant on every host
     np.testing.assert_allclose(np.asarray(m_shard["loss_est"]),

@@ -107,6 +107,17 @@ class CommLedger:
                         for k, v in self.totals.items()})
         return out
 
+    def as_row(self) -> Dict[str, float]:
+        """The ledger as an obs sink row (``kind="comm"``), so drivers can
+        interleave wire totals with the streamed round/eval/span rows."""
+        return {"kind": "comm", **self.summary()}
+
+    def emit(self, stream) -> "CommLedger":
+        """Emit :meth:`as_row` through a `MetricStream` (or any object with
+        ``emit_event``)."""
+        stream.emit_event(self.as_row())
+        return self
+
 
 # ---------------------------------------------------------------------------
 # Fig. 3 float counters (moved verbatim from core/fed.py; fed re-exports)

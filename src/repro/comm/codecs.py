@@ -237,18 +237,24 @@ def make_codec(name, topk_frac: float = 0.01, chunk: int = 256,
     if name is None or name == "none":
         return None
     if name == "identity":
-        return Identity()
-    if name == "int8":
-        return StochasticQuantizer(bits=8, chunk=chunk, impl=impl)
-    if name == "int4":
-        return StochasticQuantizer(bits=4, chunk=chunk, impl=impl)
-    if name == "topk":
-        return TopK(frac=topk_frac)
-    if name == "topk8":
-        return Chain(sparse=TopK(frac=topk_frac),
-                     quant=StochasticQuantizer(bits=8, chunk=chunk, impl=impl))
-    raise ValueError(f"unknown codec {name!r} "
-                     "(choose none|identity|int8|int4|topk|topk8)")
+        codec = Identity()
+    elif name == "int8":
+        codec = StochasticQuantizer(bits=8, chunk=chunk, impl=impl)
+    elif name == "int4":
+        codec = StochasticQuantizer(bits=4, chunk=chunk, impl=impl)
+    elif name == "topk":
+        codec = TopK(frac=topk_frac)
+    elif name == "topk8":
+        codec = Chain(sparse=TopK(frac=topk_frac),
+                      quant=StochasticQuantizer(bits=8, chunk=chunk,
+                                                impl=impl))
+    else:
+        raise ValueError(f"unknown codec {name!r} "
+                         "(choose none|identity|int8|int4|topk|topk8)")
+    # remember the CLI name for run manifests (obs/sinks.run_manifest);
+    # frozen dataclass, so set through object.__setattr__
+    object.__setattr__(codec, "name", name)
+    return codec
 
 
 # ---------------------------------------------------------------------------

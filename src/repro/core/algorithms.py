@@ -46,18 +46,20 @@ from repro.core.rounds import RunResult  # re-exported (public API since seed)
 
 def _run(step_fn, state, key, num_rounds: int, eval_fn: Optional[Callable],
          eval_every: int, extract_params=None, fl=None, driver: str = "scan",
-         topology=None):
+         topology=None, obs=None):
     """Back-compat driver shim shared with baselines/local_updates: step_fn
     has the rounds.py signature step(state, RoundInputs-slice) -> (state,
     metrics). fl is only needed for the schedule inputs; steps that ignore
     rho/gamma (SGD baselines) may pass fl=None. extract_params=None uses the
     CommCarry-aware default (rounds.unwrap_comm). topology is forwarded so
-    run_rounds can pre-place per-client carry state on the mesh."""
+    run_rounds can pre-place per-client carry state on the mesh; obs
+    (repro.obs.MetricStream) streams each round's metrics while the scan
+    runs."""
     fl = fl if fl is not None else _NULL_SCHED
     return rounds_lib.run_rounds(step_fn, state, fl, key, num_rounds,
                              eval_fn=eval_fn, eval_every=eval_every,
                              extract_params=extract_params, driver=driver,
-                             topology=topology)
+                             topology=topology, obs=obs)
 
 
 def _axis_bytes_metric(topology, grad_est, with_value: bool = False,
@@ -99,6 +101,25 @@ def _sample_ef0(params0, num_clients: int):
     return ef_init_stacked(num_clients, comm_codecs.tree_flat_dim(params0))
 
 
+def _stat_res(new_params, old_params, gamma_t):
+    """Per-round stationarity residual ‖ω^{t+1} − ω^t‖₂ / γ^t = ‖ω̄^t − ω^t‖₂
+    (the update is ω ← (1−γ)ω + γω̄, eq. 5) — the quantity Theorems 1/2
+    drive to 0, now a streamed metric on every SSCA driver."""
+    d = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        new_params, old_params)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                        for x in jax.tree.leaves(d))) / jnp.maximum(
+                            gamma_t, 1e-30)
+
+
+def _ef_norm(ef):
+    """‖EF residuals‖₂ across every stream — the amount of signal the codec
+    is still holding back (decays iff error feedback is keeping up)."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(ef)))
+
+
 class _NullSched:
     a1 = a2 = 1.0
     alpha_rho = alpha_gamma = 1.0
@@ -130,9 +151,12 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est,
+                   "stat_res": _stat_res(new.params, state.params, inp.gamma),
                    "upload_bytes": _sample_upload_bytes(
                        up, grad_est, data, participation),
                    "axis_bytes": _axis_bytes_metric(topology, grad_est)}
+        if codec is not None:
+            metrics["ef_norm"] = _ef_norm(up["ef"])
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -141,13 +165,14 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
 def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan", codec=None, topology=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None,
+               obs=None) -> RunResult:
     step = make_algorithm1_step(per_sample_loss, data, fl, participation,
                                 codec, topology)
     state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
                               lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver, topology=topology)
+                fl=fl, driver=driver, topology=topology, obs=obs)
 
 
 # ---------------------------------------------------------------------------
@@ -166,10 +191,14 @@ def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
+                   "stat_res": _stat_res(new.params, state.params, inp.gamma),
+                   "cons_viol": jnp.maximum(val_est - fl.cost_limit, 0.0),
                    "upload_bytes": _sample_upload_bytes(
                        up, grad_est, data, participation, with_value=True),
                    "axis_bytes": _axis_bytes_metric(topology, grad_est,
                                                     with_value=True)}
+        if codec is not None:
+            metrics["ef_norm"] = _ef_norm(up["ef"])
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -178,20 +207,21 @@ def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
 def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
-               driver: str = "scan", codec=None, topology=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None,
+               obs=None) -> RunResult:
     step = make_algorithm2_step(per_sample_loss, data, fl, participation,
                                 codec, topology)
     state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
                               lambda: _sample_ef0(params0, data.num_clients))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver, topology=topology)
+                fl=fl, driver=driver, topology=topology, obs=obs)
 
 
 def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                        rounds: int, key, eval_fn=None, eval_every: int = 10,
                        participation: Optional[int] = None,
                        driver: str = "scan", codec=None,
-                       topology=None) -> RunResult:
+                       topology=None, obs=None) -> RunResult:
     """Full Algorithm 2: sampled nonconvex objective AND constraint. With a
     codec the objective and constraint q-uploads carry separate EF
     residuals (ef = {"obj": (I, P), "cons": (I, P)}); under a sharded
@@ -217,11 +247,16 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                + _sample_upload_bytes(uc, cg, data, participation,
                                       with_value=True))
         metrics = {"cons_est": cv, "nu": new.nu, "slack": new.slack,
+                   "stat_res": _stat_res(new.params, state.params, inp.gamma),
+                   "cons_viol": jnp.maximum(cv - fl.cost_limit, 0.0),
                    "upload_bytes": bts,
                    "axis_bytes": (_axis_bytes_metric(topology, og)
                                   + _axis_bytes_metric(topology, cg,
                                                        with_value=True))}
-        return new, {"obj": uo["ef"], "cons": uc["ef"]}, metrics
+        new_ef = {"obj": uo["ef"], "cons": uc["ef"]}
+        if codec is not None:
+            metrics["ef_norm"] = _ef_norm(new_ef)
+        return new, new_ef, metrics
 
     step = with_comm_carry(codec, body)
     state = _wrap_codec_state(
@@ -229,7 +264,7 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
         lambda: {"obj": _sample_ef0(params0, data.num_clients),
                  "cons": _sample_ef0(params0, data.num_clients)})
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                fl=fl, driver=driver, topology=topology)
+                fl=fl, driver=driver, topology=topology, obs=obs)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +275,7 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
 def _run_feature(step_fn, state, key, num_rounds: int,
                  eval_fn: Optional[Callable], eval_every: int,
                  extract_params=None, fl=None, driver: str = "scan",
-                 topology=None):
+                 topology=None, obs=None):
     """Feature-based `_run`: same shim, but the per-client carry placement is
     the feature-EF dict layout (rounds.run_feature_rounds /
     topology.place_feature_state). Shared with baselines' feature drivers."""
@@ -248,7 +283,7 @@ def _run_feature(step_fn, state, key, num_rounds: int,
     return rounds_lib.run_feature_rounds(
         step_fn, state, fl, key, num_rounds, eval_fn=eval_fn,
         eval_every=eval_every, extract_params=extract_params, driver=driver,
-        topology=topology)
+        topology=topology, obs=obs)
 
 
 def _feature_axis_bytes(topology, uploads):
@@ -294,9 +329,12 @@ def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
             state.params, data, inp.key, fl.batch_size, head_loss_from_h,
             client_h, codec=codec, ef=ef, topology=topology)
         new, metrics = update_fn(state, grad_est, val_est, inp)
+        metrics["stat_res"] = _stat_res(new.params, state.params, inp.gamma)
         metrics["upload_bytes"] = _feature_upload_bytes(up, grad_est, data,
                                                        fl.batch_size)
         metrics["axis_bytes"] = _feature_axis_bytes(topology, up)
+        if codec is not None:
+            metrics["ef_norm"] = _ef_norm(up["ef"])
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -304,7 +342,8 @@ def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
 
 def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan", codec=None, topology=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None,
+               obs=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
@@ -315,7 +354,7 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
     state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(step, state, key, rounds, eval_fn, eval_every,
-                        fl=fl, driver=driver, topology=topology)
+                        fl=fl, driver=driver, topology=topology, obs=obs)
 
 
 # ---------------------------------------------------------------------------
@@ -325,15 +364,17 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
 
 def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               driver: str = "scan", codec=None, topology=None) -> RunResult:
+               driver: str = "scan", codec=None, topology=None,
+               obs=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
-        return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack}
+        return new, {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
+                     "cons_viol": jnp.maximum(val_est - fl.cost_limit, 0.0)}
 
     step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
                               update, topology)
     state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(step, state, key, rounds, eval_fn, eval_every,
-                        fl=fl, driver=driver, topology=topology)
+                        fl=fl, driver=driver, topology=topology, obs=obs)

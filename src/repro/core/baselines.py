@@ -74,7 +74,8 @@ def _reg_grad(per_sample_loss, lam):
 
 def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
-               momentum: bool = False, codec=None, topology=None) -> RunResult:
+               momentum: bool = False, codec=None, topology=None,
+               obs=None) -> RunResult:
     """E local (momentum-)SGD steps per client per round + weighted averaging.
     Each client's upload is its model delta Δ_i = ω_i^local − ω (compressed
     when a codec is given); the server applies ω ← ω + Σ_i (N_i/N) Δ̂_i,
@@ -130,13 +131,13 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
         SGDState(params=params0, t=jnp.ones((), jnp.int32)), codec,
         lambda: comm_ef.ef_init_stacked(data.num_clients, dim))
     return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
-                eval_every, topology=topology)
+                eval_every, topology=topology, obs=obs)
 
 
 def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
                 cfg: SGDConfig, rounds: int, key, eval_fn=None,
                 eval_every: int = 10, momentum: bool = False,
-                codec=None, topology=None) -> RunResult:
+                codec=None, topology=None, obs=None) -> RunResult:
     """One global (momentum-)SGD step per round via the Alg-3 info collection
     (codec compresses the same q-uploads as Algorithm 3; topology runs the
     feature clients local or model-axis sharded, DESIGN.md §12)."""
@@ -170,7 +171,7 @@ def feature_sgd(head_loss_from_h, client_h, params0, data: FeatureFedData,
     state = _wrap_codec_state(
         state, codec, lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(with_comm_carry(codec, body), state, key, rounds,
-                        eval_fn, eval_every, topology=topology)
+                        eval_fn, eval_every, topology=topology, obs=obs)
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +197,7 @@ def feature_frank_wolfe(head_loss_from_h, client_h, params0,
                         data: FeatureFedData, fl, cfg: FWConfig, rounds: int,
                         key, eval_fn=None, eval_every: int = 10,
                         driver: str = "scan", codec=None,
-                        topology=None) -> RunResult:
+                        topology=None, obs=None) -> RunResult:
     """ω_{t+1} = (1−η_t)ω_t + η_t·s_t with s_t the L2-ball LMO of the
     penalized subgradient g_t = 2ω_t + c·1[F̂>U]·∇F̂(ω_t). The iterate stays
     inside the ball by convexity, so the method is projection-free; it has
@@ -227,7 +228,7 @@ def feature_frank_wolfe(head_loss_from_h, client_h, params0,
         lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(with_comm_carry(codec, body), state, key, rounds,
                         eval_fn, eval_every, fl=fl, driver=driver,
-                        topology=topology)
+                        topology=topology, obs=obs)
 
 
 class DualConfig(NamedTuple):
@@ -250,7 +251,7 @@ def feature_dual_decomposition(head_loss_from_h, client_h, params0,
                                data: FeatureFedData, fl, cfg: DualConfig,
                                rounds: int, key, eval_fn=None,
                                eval_every: int = 10, driver: str = "scan",
-                               codec=None, topology=None) -> RunResult:
+                               codec=None, topology=None, obs=None) -> RunResult:
     """ω ← ω − η_ω(2ω + ν∇F̂);  ν ← clip(ν + η_ν(F̂ − U), 0, ν_max). Its ν
     IS a dual iterate, so feature_bench scores its KKT residuals directly."""
     def body(state, inp, ef):
@@ -278,4 +279,4 @@ def feature_dual_decomposition(head_loss_from_h, client_h, params0,
         lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(with_comm_carry(codec, body), state, key, rounds,
                         eval_fn, eval_every, fl=fl, driver=driver,
-                        topology=topology)
+                        topology=topology, obs=obs)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.comm import accounting as comm_accounting
 from repro.comm import codecs as comm_codecs
 from repro.core import topology as topology_lib
+from repro.obs import trace as obs_trace
 
 
 class SampleFedData(NamedTuple):
@@ -266,8 +267,9 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
         _check_ef_shape("sample_round", "q_grad", ef,
                         (data.num_clients, comm_codecs.tree_flat_dim(params)))
     topo = topology if topology is not None else topology_lib.LOCAL
-    idx = sample_batches(data, key, batch_size)      # (I, B)
-    bmask = batch_mask(data.counts, batch_size)      # (I, B)
+    with obs_trace.phase("batch-select"):
+        idx = sample_batches(data, key, batch_size)      # (I, B)
+        bmask = batch_mask(data.counts, batch_size)      # (I, B)
 
     def client(feat_i, lab_i, idx_i, mask_i):
         zb = jnp.take(feat_i, idx_i, axis=0)
@@ -342,9 +344,10 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
     _check_codec_args("feature_round", codec, ef)
     topo = topology if topology is not None else topology_lib.LOCAL
     n = data.total
-    idx = jax.random.randint(key, (batch_size,), 0, n)            # server-chosen
-    yb = jnp.take(data.labels, idx, axis=0)
-    zb = jnp.take(data.feature_blocks, idx, axis=1)               # (I, B, P_i)
+    with obs_trace.phase("batch-select"):
+        idx = jax.random.randint(key, (batch_size,), 0, n)        # server-chosen
+        yb = jnp.take(data.labels, idx, axis=0)
+        zb = jnp.take(data.feature_blocks, idx, axis=1)           # (I, B, P_i)
 
     def head_sum_loss(w0, h_sum_):
         return jnp.sum(head_loss_from_h(w0, h_sum_, yb))

@@ -35,7 +35,7 @@ class LocalSSCAState(NamedTuple):
 def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
                      rounds: int, key, *, local_steps: int = 4,
                      eval_fn=None, eval_every: int = 10,
-                     topology=None) -> RunResult:
+                     topology=None, obs=None) -> RunResult:
     """Algorithm 1 with E local SSCA (momentum-form) refinements per round.
     ``topology=`` runs the E-step client loops on the mesh (the upload here
     is the {model, momentum} pair, both N_i/N weighted-summed)."""
@@ -79,4 +79,4 @@ def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
     state = LocalSSCAState(params=params0, v=tree_zeros_like(params0),
                            t=jnp.ones((), jnp.int32))
     return _run(step, state, key, rounds, eval_fn, eval_every,
-                lambda s: s.params, fl=fl, topology=topology)
+                lambda s: s.params, fl=fl, topology=topology, obs=obs)

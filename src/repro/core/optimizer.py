@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import schedules
 from repro.core.solvers import lemma1_nu, solve_constrained_single
+from repro.obs import trace as obs_trace
 from repro.core.surrogate import (QuadSurrogate, init_surrogate,
                                   update_surrogate)
 from repro.core.tree import tree_axpy, tree_dot, tree_l2sq, tree_zeros_like
@@ -63,6 +64,7 @@ def ssca_init(params) -> SSCAState:
                      t=jnp.ones((), jnp.int32))
 
 
+@obs_trace.scoped("surrogate-solve")
 def ssca_step(state: SSCAState, grad, fl, rho_t=None, gamma_t=None) -> SSCAState:
     """grad: aggregated mini-batch gradient estimate of the *data* loss F
     (the λ‖ω‖² regularizer is injected here, not in grad)."""
@@ -99,6 +101,7 @@ def momentum_form_init(params) -> MomentumForm:
                         gamma_prev=jnp.zeros((), jnp.float32))
 
 
+@obs_trace.scoped("surrogate-solve")
 def momentum_form_step(state: MomentumForm, grad, fl, rho_t=None,
                        gamma_t=None) -> MomentumForm:
     """v^t = (1-ρ^t)(1-γ^(t-1)) v^(t-1) + (ρ^t/2τ) ĝ^t;  ω ← ω - γ^t v^t.
@@ -131,6 +134,7 @@ def ssca_constrained_init(params) -> SSCAConstrainedState:
         nu=jnp.zeros(()), slack=jnp.zeros(()))
 
 
+@obs_trace.scoped("surrogate-solve")
 def ssca_constrained_step(state: SSCAConstrainedState, loss_grad, loss_value,
                           fl, rho_t=None, gamma_t=None) -> SSCAConstrainedState:
     """min ‖ω‖² s.t. F(ω) <= U  (eq. 40). Objective is deterministic and kept
@@ -171,6 +175,7 @@ def ssca_general_constrained_init(params) -> SSCAGeneralConstrainedState:
         nu=jnp.zeros(()), slack=jnp.zeros(()))
 
 
+@obs_trace.scoped("surrogate-solve")
 def ssca_general_constrained_step(state: SSCAGeneralConstrainedState, obj_grad,
                                   cons_grad, cons_value, fl, rho_t=None,
                                   gamma_t=None) -> SSCAGeneralConstrainedState:

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import schedules
+from repro.obs import trace as obs_trace
 
 
 class RoundInputs(NamedTuple):
@@ -47,6 +48,9 @@ class RoundInputs(NamedTuple):
     key: jnp.ndarray          # (K, 2) per-round PRNG keys
     rho: jnp.ndarray          # (K,) ρ^t
     gamma: jnp.ndarray        # (K,) γ^t
+    t: jnp.ndarray            # (K,) global 1-based round numbers (int32) —
+                              # labels the obs tap's streamed rows; steps
+                              # may ignore it (they carry their own t)
 
     @property
     def num_rounds(self):
@@ -65,7 +69,9 @@ def schedule_arrays(fl, t_start: int, num_rounds: int):
 def make_inputs(fl, t_start: int, num_rounds: int, key) -> RoundInputs:
     rho, gamma = schedule_arrays(fl, t_start, num_rounds)
     return RoundInputs(key=jax.random.split(key, num_rounds),
-                       rho=rho, gamma=gamma)
+                       rho=rho, gamma=gamma,
+                       t=jnp.arange(t_start, t_start + num_rounds,
+                                    dtype=jnp.int32))
 
 
 def scan_rounds(step_fn: Callable, state, inputs: RoundInputs):
@@ -101,16 +107,20 @@ def _weak_cached(cache, step_fn, make):
 
 
 def _scan_jit(step_fn):
+    # the step runs under the "round" named scope so profiler dumps
+    # attribute device time to the protocol phase (obs/trace.py)
     return _weak_cached(
         _SCAN_CACHE, step_fn,
         lambda ref: jax.jit(
-            lambda state, inputs: jax.lax.scan(ref(), state, inputs)))
+            lambda state, inputs: jax.lax.scan(
+                obs_trace.scoped("round", ref()), state, inputs)))
 
 
 def _step_jit(step_fn):
     return _weak_cached(
         _STEP_CACHE, step_fn,
-        lambda ref: jax.jit(lambda state, inp: ref()(state, inp)))
+        lambda ref: jax.jit(
+            lambda state, inp: obs_trace.scoped("round", ref())(state, inp)))
 
 
 def loop_rounds(step_fn: Callable, state, inputs: RoundInputs):
@@ -163,11 +173,39 @@ def chunk_sizes(rounds: int, chunk: int):
     return sizes
 
 
+def _check_eval_keys(metrics, step_metric_names):
+    """Eval-hook metrics share the history dict with the per-round scan-step
+    series — a same-named key would silently overwrite the (K,) series (or
+    corrupt the "round" index). Collisions are an error, not a merge."""
+    reserved = {"round", "round_t"}
+    reserved.update("round_" + k for k in step_metric_names)
+    bad = sorted(set(metrics) & reserved)
+    if bad:
+        raise ValueError(
+            f"eval_fn metric keys {bad} collide with the per-round history "
+            "series (\"round\", \"round_t\", and \"round_<step metric>\" "
+            "are reserved) — rename them, e.g. namespace as 'eval/<name>'")
+
+
+def _emit_eval(obs, metrics, t_global: int):
+    """Stream an eval-hook result through the obs tap (scalar-coercible
+    values only — eval hooks may return arrays, which stay history-only)."""
+    row = {"kind": "eval", "t": int(t_global)}
+    for k, v in metrics.items():
+        try:
+            row[k] = float(v)
+        except (TypeError, ValueError):
+            continue
+    # no sync needed: events ride the drainer queue behind the chunk's
+    # flush, so the finished chunk's round rows land first anyway
+    obs.emit_event(row)
+
+
 def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
                eval_fn: Optional[Callable] = None, eval_every: int = 0,
                extract_params: Optional[Callable] = None,
                t_start: int = 1, driver: str = "scan",
-               topology=None) -> RunResult:
+               topology=None, obs=None) -> RunResult:
     """High-level driver: scan-compile rounds, with optional periodic host
     evaluation between scan chunks.
 
@@ -175,11 +213,17 @@ def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
     E-round chunk is one dispatch and eval_fn(params, state) runs between
     chunks. history carries the eval series under their own names keyed by
     "round", plus every step metric as a full (K,) per-round series under
-    "round_<name>" (with "round_t" = t_start..t_start+K-1).
+    "round_<name>" (with "round_t" = t_start..t_start+K-1). Eval metric
+    names that would shadow a per-round series raise (no silent overwrite).
 
     ``topology`` (core/topology.py) is the client-execution engine the step
     was built with; passing it here lets the driver pre-place per-client
     carry state (EF residuals) over the mesh before the first dispatch.
+
+    ``obs`` (repro.obs.MetricStream) streams every round's metrics to host
+    sinks *while* each dispatch runs, and interleaves eval results into the
+    same log; trajectories and the returned history are bitwise-unchanged
+    (DESIGN.md §13).
     """
     engine = ENGINES[driver]
     if topology is not None:
@@ -198,14 +242,21 @@ def run_rounds(step_fn: Callable, state, fl, key, rounds: int,
     t0 = t_start
     for size in sizes:
         key, sub = jax.random.split(key)
-        state, ms = engine(step_fn, state, make_inputs(fl, t0, size, sub))
+        inputs = make_inputs(fl, t0, size, sub)
+        if obs is not None:
+            state, ms = obs.run(step_fn, state, inputs, driver=driver)
+        else:
+            state, ms = engine(step_fn, state, inputs)
         t0 += size
         per_round.append(ms)
         if eval_fn is not None:
             metrics = eval_fn(extract_params(state), state)
+            _check_eval_keys(metrics, per_round[0])
             for k, v in metrics.items():
                 hist.setdefault(k, []).append(v)
             hist["round"].append(t0 - t_start)
+            if obs is not None:
+                _emit_eval(obs, metrics, t0 - 1)
     history = {k: jnp.asarray(v) for k, v in hist.items()}
     if per_round and per_round[0]:
         for k in per_round[0]:
@@ -219,7 +270,7 @@ def run_feature_rounds(step_fn: Callable, state, fl, key, rounds: int,
                        eval_every: int = 0,
                        extract_params: Optional[Callable] = None,
                        t_start: int = 1, driver: str = "scan",
-                       topology=None) -> RunResult:
+                       topology=None, obs=None) -> RunResult:
     """Feature-based (vertical FL, Algorithms 3/4) counterpart of
     :func:`run_rounds`: K vertical rounds — h-exchange, head + block
     q-uploads, 1/B aggregation (eq. 16), SSCA update — compile to ONE
@@ -238,4 +289,4 @@ def run_feature_rounds(step_fn: Callable, state, fl, key, rounds: int,
             state = place(state)
     return run_rounds(step_fn, state, fl, key, rounds, eval_fn=eval_fn,
                       eval_every=eval_every, extract_params=extract_params,
-                      t_start=t_start, driver=driver)
+                      t_start=t_start, driver=driver, obs=obs)

@@ -67,6 +67,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import codecs as comm_codecs
 from repro.comm import error_feedback as comm_ef
+from repro.obs import trace as obs_trace
 
 
 class ClientSums(NamedTuple):
@@ -147,12 +148,15 @@ class LocalTopology:
                      active=None) -> ClientSums:
         """client_fn(*per_client_args) -> (upload pytree, val scalar); args
         are (I, ...)-leading arrays; returns all of :class:`ClientSums`."""
-        uploads, values = jax.vmap(client_fn)(*args)
+        with obs_trace.phase("client-compute"):
+            uploads, values = jax.vmap(client_fn)(*args)
         enc = new_ef = None
         if codec is not None:
-            enc, uploads, new_ef = _compress_stacked(codec, uploads, ef,
-                                                     codec_keys, active)
-        weighted, value = _weighted(weights, uploads, values)
+            with obs_trace.phase("codec-encode"):
+                enc, uploads, new_ef = _compress_stacked(codec, uploads, ef,
+                                                         codec_keys, active)
+        with obs_trace.phase("aggregate"):
+            weighted, value = _weighted(weights, uploads, values)
         return ClientSums(weighted=weighted, value=value, uploads=uploads,
                           values=values, encoded=enc, ef=new_ef)
 
@@ -167,15 +171,20 @@ class LocalTopology:
         block_grad_fn(block_i, zb_i, dl_dh) -> q_{f,0,i}. blocks/zb are
         (I, ...)-leading. This vmap path is the bit-level reference every
         sharded result is pinned against."""
-        h = jax.vmap(h_fn)(blocks, zb)                       # (I, B, J)
-        h_sum = jnp.sum(h, axis=0)
-        value, q_head, dl_dh = head_fn(h_sum)
-        q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
-            blocks, zb, dl_dh)
+        with obs_trace.phase("client-compute"):
+            h = jax.vmap(h_fn)(blocks, zb)                   # (I, B, J)
+        with obs_trace.phase("aggregate"):
+            h_sum = jnp.sum(h, axis=0)
+        with obs_trace.phase("head-compute"):
+            value, q_head, dl_dh = head_fn(h_sum)
+        with obs_trace.phase("client-compute"):
+            q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
+                blocks, zb, dl_dh)
         enc = new_ef = None
         if codec is not None:
-            enc, q_head, q_blocks, new_ef = _compress_feature(
-                codec, q_head, q_blocks, ef, head_key, block_keys)
+            with obs_trace.phase("codec-encode"):
+                enc, q_head, q_blocks, new_ef = _compress_feature(
+                    codec, q_head, q_blocks, ef, head_key, block_keys)
         return FeatureSums(h=h, h_sum=h_sum, value=value, q_head=q_head,
                            q_blocks=q_blocks, encoded=enc, ef=new_ef)
 
@@ -251,14 +260,18 @@ class ShardedTopology:
         has_codec = codec is not None
 
         def body(args_l, weights_l, ef_l, keys_l, act_l):
-            uploads, values = jax.vmap(client_fn)(*args_l)
+            with obs_trace.phase("client-compute"):
+                uploads, values = jax.vmap(client_fn)(*args_l)
             enc = new_ef = None
             if has_codec:
-                enc, uploads, new_ef = _compress_stacked(
-                    codec, uploads, ef_l, keys_l, act_l)
-            partial, val_partial = _weighted(weights_l, uploads, values)
-            weighted = jax.lax.psum(partial, axes)
-            value = jax.lax.psum(val_partial, axes)
+                with obs_trace.phase("codec-encode"):
+                    enc, uploads, new_ef = _compress_stacked(
+                        codec, uploads, ef_l, keys_l, act_l)
+            with obs_trace.phase("aggregate"):
+                partial, val_partial = _weighted(weights_l, uploads, values)
+            with obs_trace.phase("collective"):
+                weighted = jax.lax.psum(partial, axes)
+                value = jax.lax.psum(val_partial, axes)
             return weighted, value, uploads, values, enc, new_ef
 
         sharded = shard_map(
@@ -311,16 +324,22 @@ class ShardedTopology:
         ef_out_spec = {"w0": P(), "blocks": spec} if has_codec else P()
 
         def body(blocks_l, zb_l, ef_l, bkeys_l, hkey):
-            h_l = jax.vmap(h_fn)(blocks_l, zb_l)             # (I/D, B, J)
-            h_all = jax.lax.all_gather(h_l, axes, axis=0, tiled=True)
-            h_sum = jnp.sum(h_all, axis=0)
-            value, q_head, dl_dh = head_fn(h_sum)
-            q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
-                blocks_l, zb_l, dl_dh)
+            with obs_trace.phase("client-compute"):
+                h_l = jax.vmap(h_fn)(blocks_l, zb_l)         # (I/D, B, J)
+            with obs_trace.phase("collective"):
+                h_all = jax.lax.all_gather(h_l, axes, axis=0, tiled=True)
+            with obs_trace.phase("aggregate"):
+                h_sum = jnp.sum(h_all, axis=0)
+            with obs_trace.phase("head-compute"):
+                value, q_head, dl_dh = head_fn(h_sum)
+            with obs_trace.phase("client-compute"):
+                q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
+                    blocks_l, zb_l, dl_dh)
             enc = new_ef = None
             if has_codec:
-                enc, q_head, q_blocks, new_ef = _compress_feature(
-                    codec, q_head, q_blocks, ef_l, hkey, bkeys_l)
+                with obs_trace.phase("codec-encode"):
+                    enc, q_head, q_blocks, new_ef = _compress_feature(
+                        codec, q_head, q_blocks, ef_l, hkey, bkeys_l)
             return h_l, h_sum, value, q_head, q_blocks, enc, new_ef
 
         sharded = shard_map(

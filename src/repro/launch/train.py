@@ -33,10 +33,18 @@ blocks. ``--topology sharded`` places each feature client on its own
 as a tiled all_gather; the codec flags compress the head + block q-uploads
 exactly as in core/algorithms.py.
 
+Observability (DESIGN.md §13): ``--log-jsonl out.jsonl`` streams per-round
+rows (loss, stationarity residual, upload bytes, ...) to disk WHILE the scan
+runs via the obs/ MetricStream tap, writes a run manifest (config, mesh,
+codec, per-dispatch HLO cost) next to it, and interleaves host-span timing
+rows; ``--log-every N`` thins the stream; ``--profile DIR`` wraps the run in
+a jax.profiler trace whose timeline carries the protocol phase annotations.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
           [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
-          [--codec-impl pallas] [--topology local|sharded] [--shards 8]
+          [--codec-impl pallas] [--topology local|sharded] [--shards 8] \
+          [--log-jsonl out.jsonl --log-every 1 --profile prof/]
       PYTHONPATH=src python -m repro.launch.train --mode feature \
           --clients 4 --steps 200 [--constrained --cost-limit 1.2] \
           [--topology sharded] [--codec int8] [--driver scan|loop]
@@ -44,6 +52,7 @@ CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Optional
 
@@ -59,6 +68,24 @@ from repro.core import optimizer, rounds
 from repro.core import topology as topology_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import get_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import sinks as obs_sinks
+from repro.obs import trace as obs_trace
+
+
+def _make_stream(log_jsonl, log_stream_every, profile_dir, name):
+    """Observability trio for a training loop: MetricStream (JSONL when
+    ``log_jsonl`` is set), HostSpans bound to it, and the profiler context
+    (nullcontext unless ``profile_dir``). Always returns a live stream so
+    span rows have somewhere to go; with no sinks it is just an in-memory
+    row buffer."""
+    sinks = [obs_sinks.JsonlSink(log_jsonl)] if log_jsonl else []
+    stream = obs_metrics.MetricStream(sinks, log_every=log_stream_every,
+                                      name=name)
+    spans = obs_trace.HostSpans(stream)
+    prof = (obs_trace.profile(profile_dir) if profile_dir
+            else contextlib.nullcontext())
+    return stream, spans, prof
 
 
 def _ssca_update(state, loss, grads, fl: FLConfig, rho_t, gamma_t,
@@ -205,7 +232,9 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                ckpt_path: Optional[str] = None, seed: int = 0,
                driver: str = "scan", codec: Optional[str] = None,
                topk_frac: float = 0.01, codec_impl: str = "ref",
-               topology: str = "local", shards: Optional[int] = None):
+               topology: str = "local", shards: Optional[int] = None,
+               log_jsonl: Optional[str] = None, log_stream_every: int = 1,
+               profile_dir: Optional[str] = None):
     from repro.data.synthetic import token_dataset
 
     cfg = get_config(arch)
@@ -235,25 +264,45 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
     engine = rounds.ENGINES[driver]
     sizes = rounds.chunk_sizes(steps, log_every)
 
+    stream, spans, prof = _make_stream(log_jsonl, log_stream_every,
+                                       profile_dir, name=arch)
+    if log_jsonl:
+        from repro.roofline.analysis import jit_cost_summary
+        probe = jax.tree.map(
+            lambda x: x[0],
+            rounds.make_inputs(fl, 1, 1, jax.random.fold_in(key, 3)))
+        obs_sinks.write_manifest(
+            log_jsonl + ".manifest.json",
+            config={"arch": arch, "steps": steps, "batch": batch, "seq": seq,
+                    "constrained": constrained, "driver": driver,
+                    "smoke": smoke, "seed": seed},
+            codec=codec_obj, topology=topo,
+            cost=jit_cost_summary(step_fn, state, probe))
+
     logs = []
     t0, done = 1, 0
     key_run = jax.random.fold_in(key, 2)
     wall0 = time.time()
-    for size in sizes:
-        key_run, sub = jax.random.split(key_run)
-        state, ms = engine(step_fn, state, rounds.make_inputs(fl, t0, size, sub))
-        t0 += size
-        done += size
-        m = {k: float(v[-1]) for k, v in ms.items()}
-        m["step"] = done
-        m["wall_s"] = time.time() - wall0
-        logs.append(m)
-        print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
-                       for k, v in m.items()), flush=True)
+    with prof:
+        for size in sizes:
+            key_run, sub = jax.random.split(key_run)
+            inputs = rounds.make_inputs(fl, t0, size, sub)
+            with spans.span("dispatch", rounds=size, t0=t0):
+                state, ms = stream.run(step_fn, state, inputs, driver=driver) \
+                    if log_jsonl else engine(step_fn, state, inputs)
+            t0 += size
+            done += size
+            m = {k: float(v[-1]) for k, v in ms.items()}
+            m["step"] = done
+            m["wall_s"] = time.time() - wall0
+            logs.append(m)
+            print(" ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                           else f"{k}={v}" for k, v in m.items()), flush=True)
     if ckpt_path:
         from repro.checkpoint import save_checkpoint
         save_checkpoint(ckpt_path, rounds.unwrap_comm(state).params,
                         step=steps)
+    stream.close()
     return state, logs
 
 
@@ -270,7 +319,10 @@ def feature_train_loop(*, clients: int = 4, rounds: int = 200,
                        topology: str = "local", codec: Optional[str] = None,
                        topk_frac: float = 0.01, codec_impl: str = "ref",
                        driver: str = "scan", log_every: int = 20,
-                       seed: int = 0, fl: Optional[FLConfig] = None):
+                       seed: int = 0, fl: Optional[FLConfig] = None,
+                       log_jsonl: Optional[str] = None,
+                       log_stream_every: int = 1,
+                       profile_dir: Optional[str] = None):
     """Vertical-FL driver: synthetic classification, features split into
     `clients` blocks, MLP head composition (models/mlp.py), Algorithm 3 or
     (constrained) Algorithm 4 via run_feature_rounds. Returns the RunResult.
@@ -313,11 +365,23 @@ def feature_train_loop(*, clients: int = 4, rounds: int = 200,
         return unwrap_comm(s).slack
 
     alg = algorithms.algorithm4 if constrained else algorithms.algorithm3
+    stream, spans, prof = _make_stream(log_jsonl, log_stream_every,
+                                       profile_dir, name="feature")
+    if log_jsonl:
+        obs_sinks.write_manifest(
+            log_jsonl + ".manifest.json",
+            config={"mode": "feature", "clients": clients, "rounds": rounds,
+                    "batch": batch, "features": features, "classes": classes,
+                    "hidden": hidden, "n": n, "constrained": constrained,
+                    "cost_limit": cost_limit, "driver": driver, "seed": seed},
+            codec=codec_obj, topology=topo)
     wall0 = time.time()
-    result = alg(mlp.per_sample_loss_from_h, mlp.client_h, params0, data, fl,
-                 rounds, jax.random.fold_in(key, 2), eval_fn=eval_fn,
-                 eval_every=log_every, driver=driver, codec=codec_obj,
-                 topology=topo)
+    with prof, spans.span("run", rounds=rounds):
+        result = alg(mlp.per_sample_loss_from_h, mlp.client_h, params0, data,
+                     fl, rounds, jax.random.fold_in(key, 2), eval_fn=eval_fn,
+                     eval_every=log_every, driver=driver, codec=codec_obj,
+                     topology=topo, obs=stream if log_jsonl else None)
+    stream.close()
     for i, r in enumerate(result.history["round"]):
         line = {k: float(v[i]) for k, v in result.history.items()
                 if not k.startswith("round")}
@@ -369,6 +433,15 @@ def main():
                     help="client-shard count for --topology sharded "
                          "(default: all host devices; must divide --batch)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="stream round/eval/span rows to PATH as JSONL while "
+                         "the scan runs (obs/ subsystem, DESIGN.md §13); a "
+                         "run manifest is written to PATH.manifest.json")
+    ap.add_argument("--log-every", type=int, default=1, metavar="N",
+                    help="emit every N-th streamed round row (default 1)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="jax.profiler trace of the whole run into DIR "
+                         "(phase-annotated; open with xprof/perfetto)")
     args = ap.parse_args()
     if args.mode == "feature":
         feature_train_loop(clients=args.clients, rounds=args.steps,
@@ -378,7 +451,10 @@ def main():
                            cost_limit=args.cost_limit,
                            topology=args.topology, codec=args.codec,
                            topk_frac=args.topk_frac,
-                           codec_impl=args.codec_impl, driver=args.driver)
+                           codec_impl=args.codec_impl, driver=args.driver,
+                           log_jsonl=args.log_jsonl,
+                           log_stream_every=args.log_every,
+                           profile_dir=args.profile)
         return
     if args.arch is None:
         ap.error("--arch is required for --mode sample")
@@ -386,7 +462,9 @@ def main():
                constrained=args.constrained, ckpt_path=args.ckpt,
                driver=args.driver, codec=args.codec,
                topk_frac=args.topk_frac, codec_impl=args.codec_impl,
-               topology=args.topology, shards=args.shards)
+               topology=args.topology, shards=args.shards,
+               log_jsonl=args.log_jsonl, log_stream_every=args.log_every,
+               profile_dir=args.profile)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,222 @@
+"""Pluggable row sinks + the run manifest (DESIGN.md §13).
+
+A *row* is a flat JSON-serializable dict; by convention it carries a
+``"kind"`` discriminator (``round`` — one scanned federated round, ``eval``
+— an eval-hook result, ``span`` — a host wall-clock span, ``comm`` — a
+`CommLedger` snapshot). A *sink* is anything with ``emit(row)`` and
+``close()`` (plus an optional ``flush()``, called once per flush-chunk);
+`MetricStream` fans every row out to its sinks in order.
+
+The *manifest* records what a run WAS — config, mesh/devices, codec,
+topology, git sha, jax version, and (optionally) the per-dispatch HLO
+flops/bytes from `roofline` — as one JSON document next to the JSONL log,
+so a metrics file is interpretable without the shell history that produced
+it. `bench_json` is the shared BENCH_*.json emitter: payload to ``path``,
+manifest to ``path + ".manifest.json"`` (benchmarks/{comm,shard,feature,
+obs}_bench all write through it).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import subprocess
+import time
+from typing import Optional
+
+
+def _jsonable(v):
+    """Best-effort conversion of a row/manifest value to JSON-serializable
+    form (numpy/jax scalars -> python; unknown objects -> repr)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if hasattr(v, "item") and getattr(v, "ndim", None) == 0:
+        return v.item()
+    if hasattr(v, "_asdict"):          # NamedTuple configs (FLConfig etc.)
+        return _jsonable(v._asdict())
+    if hasattr(v, "__dict__") and type(v).__module__ != "builtins":
+        try:
+            return _jsonable(vars(v))
+        except TypeError:
+            pass
+    return repr(v)
+
+
+class JsonlSink:
+    """One JSON object per line. Rows are buffered; `MetricStream`'s
+    drainer calls :meth:`flush` once per flush-chunk, so the file is
+    tail -f-able at chunk granularity without paying one fflush per row
+    (which dominates the sink cost at sub-ms rounds on small hosts)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+
+    def emit(self, row: dict):
+        # round rows are already plain floats/ints/strs — serialize those
+        # on the fast path and only pay _jsonable's recursive conversion
+        # for rows that actually carry numpy/jax/exotic values
+        try:
+            line = json.dumps(row)
+        except (TypeError, ValueError):
+            line = json.dumps(_jsonable(row))
+        self._f.write(line + "\n")
+
+    def flush(self):
+        self._f.flush()
+
+    def close(self):
+        self._f.close()
+
+
+class CsvSink:
+    """Buffers rows and writes one CSV at close with the union of all keys
+    (first-seen column order); missing cells are empty."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._rows: list = []
+
+    def emit(self, row: dict):
+        self._rows.append(_jsonable(row))
+
+    def close(self):
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        cols: list = []
+        for r in self._rows:
+            for k in r:
+                if k not in cols:
+                    cols.append(k)
+        with open(self.path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=cols, restval="")
+            w.writeheader()
+            w.writerows(self._rows)
+
+
+class StdoutSink:
+    """`k=v` lines to stdout (the historical train-loop log format)."""
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+
+    def emit(self, row: dict):
+        body = " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in _jsonable(row).items())
+        print((self.prefix + " " + body) if self.prefix else body, flush=True)
+
+    def close(self):
+        pass
+
+
+class MemorySink:
+    """Keeps rows in a list (tests, notebooks)."""
+
+    def __init__(self):
+        self.rows: list = []
+
+    def emit(self, row: dict):
+        self.rows.append(dict(row))
+
+    def close(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# run manifest
+# ---------------------------------------------------------------------------
+
+
+def git_sha() -> Optional[str]:
+    """HEAD sha of the repo this package lives in, or None (e.g. when
+    installed from a wheel — the manifest must never fail a run)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _topology_info(topology) -> Optional[dict]:
+    if topology is None:
+        return None
+    info = {"name": getattr(topology, "name", type(topology).__name__),
+            "num_shards": getattr(topology, "num_shards", 1)}
+    mesh = getattr(topology, "mesh", None)
+    if mesh is not None:
+        info["mesh_axes"] = dict(zip(mesh.axis_names,
+                                     [int(s) for s in mesh.devices.shape]))
+        info["client_axes"] = list(getattr(topology, "axes", ()))
+    return info
+
+
+def run_manifest(config=None, *, codec=None, topology=None, cost=None,
+                 extra=None) -> dict:
+    """Everything needed to interpret a metrics log, as one dict:
+    environment (jax version, backend, device fleet), provenance (git sha,
+    wall time), protocol (config, codec, topology/mesh), and optionally the
+    per-dispatch HLO cost (``cost=`` — see
+    `roofline.analysis.jit_cost_summary`)."""
+    import jax
+
+    man = {
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+        "config": _jsonable(config),
+        "codec": getattr(codec, "name", None) if codec is not None
+                 else (codec if isinstance(codec, str) else None),
+        "topology": _topology_info(topology),
+    }
+    if cost is not None:
+        man["hlo_cost"] = _jsonable(cost)
+    if extra:
+        man.update(_jsonable(dict(extra)))
+    return man
+
+
+def write_manifest(path: str, config=None, *, codec=None, topology=None,
+                   cost=None, extra=None) -> dict:
+    """Build `run_manifest` and write it to ``path`` as indented JSON."""
+    man = run_manifest(config, codec=codec, topology=topology, cost=cost,
+                       extra=extra)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(man, f, indent=1)
+    return man
+
+
+def bench_json(path: str, payload, *, manifest: Optional[dict] = None,
+               **manifest_kwargs):
+    """The shared BENCH_*.json emitter: payload (unchanged schema) to
+    ``path``, run manifest to ``path + ".manifest.json"``. All benchmarks
+    write through this so every artifact records the environment that
+    produced it."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_jsonable(payload), f, indent=1)
+    man = manifest if manifest is not None else run_manifest(**manifest_kwargs)
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(_jsonable(man), f, indent=1)
+    print(f"# wrote {path} (+ {os.path.basename(path)}.manifest.json)",
+          flush=True)

@@ -1,0 +1,98 @@
+"""Span-based phase tracing for the federated round (DESIGN.md §13).
+
+Two clocks, one vocabulary:
+
+* **In-jit phases** (`phase`): `jax.named_scope` annotations compiled into
+  the HLO metadata, so an xprof/perfetto dump attributes device time to
+  protocol phases — ``round → client-compute → codec-encode → collective →
+  surrogate-solve``. Scopes are free at runtime (they only label ops at
+  trace time) and therefore safe on the hot path; they are applied inside
+  `core/topology.py`, `core/optimizer.py`, `core/fed.py`, and the round
+  drivers unconditionally.
+* **Host spans** (`HostSpans`): wall-clock timing at dispatch boundaries —
+  the scan dispatch itself, eval hooks, checkpoint writes — paired with
+  `jax.profiler.TraceAnnotation` so the same names appear on the profiler
+  timeline. Spans are plain rows (``kind="span"``) emitted through the
+  sink API, so a JSONL log interleaves rounds, evals, and spans in order.
+
+`profile(logdir)` wraps a whole run in `jax.profiler.start_trace` /
+`stop_trace`; the resulting directory opens in xprof/perfetto and contains
+the named scopes above (exercised by the CI obs-smoke job).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import time
+
+import jax
+
+# the canonical phase names, in protocol order (DESIGN.md §13); free-form
+# names are allowed everywhere, this is the shared vocabulary
+PHASES = ("round", "client-compute", "codec-encode", "collective",
+          "aggregate", "head-compute", "batch-select", "surrogate-solve")
+
+
+def phase(name: str):
+    """In-jit phase annotation: a `jax.named_scope` context manager. Use
+    around trace-time code regions; compiles to op metadata, costs nothing
+    at runtime."""
+    return jax.named_scope(name)
+
+
+def scoped(name: str, fn=None):
+    """Wrap fn so every call runs under `phase(name)`. Usable directly —
+    ``scoped("round", step_fn)`` (the round drivers label the scanned step
+    this way) — or as a decorator: ``@scoped("surrogate-solve")``."""
+    if fn is None:
+        return lambda f: scoped(name, f)
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with jax.named_scope(name):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
+class HostSpans:
+    """Host-side wall-clock spans at dispatch boundaries.
+
+    Each completed span appends ``{"kind": "span", "span": name,
+    "dur_s": ..., **attrs}`` to :attr:`spans` and, when a stream (any object
+    with ``emit_event(row)``, e.g. `obs.metrics.MetricStream`) is attached,
+    emits the row through it — so the JSONL log carries dispatch timings
+    next to the round rows they bracket. The span body also runs under
+    `jax.profiler.TraceAnnotation(name)`, putting the same name on the
+    profiler timeline.
+    """
+
+    def __init__(self, stream=None):
+        self.stream = stream
+        self.spans: list = []
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        t0 = time.perf_counter()
+        with jax.profiler.TraceAnnotation(name):
+            yield
+        row = {"kind": "span", "span": name,
+               "dur_s": time.perf_counter() - t0}
+        row.update(attrs)
+        self.spans.append(row)
+        if self.stream is not None:
+            self.stream.emit_event(row)
+
+
+@contextlib.contextmanager
+def profile(logdir: str):
+    """Profile the enclosed block with `jax.profiler` into ``logdir``
+    (created if missing). The dump contains the `phase` named scopes and
+    every `HostSpans` TraceAnnotation; open it with xprof or
+    ui.perfetto.dev."""
+    os.makedirs(logdir, exist_ok=True)
+    jax.profiler.start_trace(logdir)
+    try:
+        yield logdir
+    finally:
+        jax.profiler.stop_trace()

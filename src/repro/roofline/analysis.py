@@ -96,6 +96,36 @@ def roofline_terms(cost: dict, coll_bytes: int, hw: HW = HW()) -> dict:
     return terms
 
 
+def jit_cost_summary(fn, *args) -> dict:
+    """Compile ``fn(*args)`` and summarize its per-dispatch HLO cost.
+
+    Returns ``{"xla": {...}, "flops": ..., "bytes": ..., "collectives": ...}``
+    — the XLA ``cost_analysis()`` dict (normalized across jax versions by
+    `hlo_cost.xla_cost_analysis`) alongside this package's own HLO-text
+    analysis. Every stage is guarded: a backend that can't lower or analyze
+    simply drops keys rather than raising, so the obs run-manifest probe
+    (launch/train.py) is safe on any platform."""
+    import jax
+
+    from repro.roofline import hlo_cost
+
+    out: dict = {}
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+    except Exception:
+        return out
+    xla = hlo_cost.xla_cost_analysis(compiled)
+    if xla:
+        out["xla"] = xla
+    try:
+        parsed = hlo_cost.analyze(compiled.as_text())
+        out.update({k: parsed[k] for k in ("flops", "bytes", "collectives")
+                    if k in parsed})
+    except Exception:
+        pass
+    return out
+
+
 def model_flops(cfg, num_tokens: int, param_count: int,
                 active_param_count: int | None = None) -> float:
     """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE)."""
