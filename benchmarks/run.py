@@ -15,9 +15,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (extensions_bench, figures, kernels_bench,
-                            obs_bench, rounds_bench)
+                            obs_bench, rounds_bench, scale_bench)
     benches = [
         ("rounds_scan_vs_loop", rounds_bench.rounds_scan_vs_loop),
+        ("scale_cohort_engine", scale_bench.scale_smoke),
         ("obs_stream_overhead", obs_bench.obs_overhead),
         ("fig1_unconstrained_sample_based", figures.fig1_unconstrained_sample_based),
         ("fig1ef_constrained_sample_based", figures.fig1ef_constrained_sample_based),

@@ -1,0 +1,242 @@
+"""Cohort-engine scaling: round throughput independent of population size
+(DESIGN.md §14).
+
+The O(S) engine's claim is that per-round cost depends only on the cohort
+size S, never on the population size I: the Feistel draw touches S ids, the
+virtual data view synthesizes S shards, and (without a codec) no (I, ...)
+array exists anywhere in the round. This bench pins that claim two ways:
+
+  * **flatness sweep** — the same Algorithm-1 cohort chain (S = 256, small
+    MLP, scan-compiled K-round dispatch) over I in {1e3, 1e4, 1e5, 1e6};
+    rounds/second at every I must sit within 10% of the I = 1e3 baseline
+    (interleaved best-of-N timing, compile excluded; see _make_runner for
+    why the repeats are round-robined across the sweep). The sweep deliberately runs the
+    codec-free path: int8+EF keeps an (I, P) EFStore backing outside the
+    round (inherent persistent state, documented in §14), which is exactly
+    what the sweep must NOT accidentally time.
+  * **trajectory equality** — at small I the O(S) engine must reproduce the
+    dense masked engine (atol 1e-5) for every sample-based driver: alg1,
+    alg2, alg2_general, sample_sgd, each composed with int8+EF, plus the
+    int8+EF+sharded-topology composition.
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benches and
+writes the result to JSON (``BENCH_scale.json`` in CI). ``--maxrss`` prints
+a final ``MAXRSS_KB=<n>`` line so CI can assert peak memory is independent
+of I across subprocess runs.
+
+Usage:  PYTHONPATH=src python -m benchmarks.scale_bench [--smoke]
+            [--participation 256] [--rounds 64] [--json BENCH_scale.json]
+            [--maxrss] [--skip-traj]
+"""
+import argparse
+import time
+
+FULL_SWEEP = (1_000, 10_000, 100_000, 1_000_000)
+SMOKE_SWEEP = (1_000, 10_000, 100_000)
+
+
+def _make_runner(clients, participation, rounds, batch=16,
+                 features=32, classes=4, hidden=16):
+    """Build + compile one timed cohort chain; returns run() -> seconds.
+
+    The runners for every I are built up front and timed INTERLEAVED
+    (round-robin over the sweep) so host-level drift — thermal throttling,
+    noisy-neighbor CPU on shared runners — hits every population size
+    equally instead of biasing whichever I happened to run last."""
+    import jax
+
+    from repro.configs.base import FLConfig
+    from repro.core import algorithms, optimizer
+    from repro.core import rounds as rounds_lib
+    from repro.data.synthetic import VirtualFedData
+    from repro.models import mlp
+
+    data = VirtualFedData(jax.random.fold_in(jax.random.PRNGKey(0), clients),
+                          clients, num_features=features,
+                          num_classes=classes, noise=4.0)
+    params0 = mlp.init(jax.random.PRNGKey(1), features, hidden, classes)
+    fl = FLConfig(batch_size=batch, a1=0.3, a2=0.3, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.05, l2_lambda=1e-5)
+    step = algorithms.make_algorithm1_step(mlp.per_sample_loss, data, fl,
+                                           participation=participation,
+                                           cohort=True)
+    inputs = rounds_lib.make_inputs(fl, 1, rounds, jax.random.PRNGKey(2))
+    state0 = optimizer.ssca_init(params0)
+
+    s, _ = rounds_lib.scan_rounds(step, state0, inputs)     # compile + warm
+    jax.block_until_ready(s.params)
+
+    def run():
+        t0 = time.perf_counter()
+        out, _ = rounds_lib.scan_rounds(step, state0, inputs)
+        jax.block_until_ready(out.params)
+        return time.perf_counter() - t0
+
+    return run
+
+
+def _trajectory_diffs(clients=48, participation=12, rounds=10):
+    """Dense engine vs O(S) engine, every sample-based driver, int8+EF."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.codecs import make_codec
+    from repro.configs.base import FLConfig
+    from repro.core import algorithms, baselines
+    from repro.core import topology as topology_lib
+    from repro.data.synthetic import VirtualFedData
+    from repro.models import mlp
+
+    P, J, L = 10, 8, 3
+    key = jax.random.PRNGKey(31)
+    vd = VirtualFedData(jax.random.fold_in(key, 1), clients, n_min=6,
+                        n_max=14, num_features=P, num_classes=L)
+    dense = vd.materialize()
+    params0 = mlp.init(jax.random.fold_in(key, 2), P, J, L)
+    rk = jax.random.fold_in(key, 3)
+    fl = FLConfig(batch_size=6, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
+    flc = FLConfig(batch_size=6, a1=0.9, a2=0.5, alpha_rho=0.1,
+                   alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5,
+                   constrained=True, cost_limit=1.2, penalty_c=1e4)
+    codec = make_codec("int8")
+    kw = dict(participation=participation, codec=codec)
+
+    def maxdiff(a, b):
+        return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+                   zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+
+    diffs = {}
+    diffs["alg1_int8"] = maxdiff(
+        algorithms.algorithm1(mlp.per_sample_loss, params0, dense, fl,
+                              rounds, rk, **kw),
+        algorithms.algorithm1(mlp.per_sample_loss, params0, vd, fl,
+                              rounds, rk, cohort=True, **kw))
+    diffs["alg2_int8"] = maxdiff(
+        algorithms.algorithm2(mlp.per_sample_loss, params0, dense, flc,
+                              rounds, rk, **kw),
+        algorithms.algorithm2(mlp.per_sample_loss, params0, vd, flc,
+                              rounds, rk, cohort=True, **kw))
+    diffs["alg2_general_int8"] = maxdiff(
+        algorithms.algorithm2_general(mlp.per_sample_loss,
+                                      mlp.per_sample_loss, params0, dense,
+                                      flc, rounds, rk, **kw),
+        algorithms.algorithm2_general(mlp.per_sample_loss,
+                                      mlp.per_sample_loss, params0, vd,
+                                      flc, rounds, rk, cohort=True, **kw))
+    cfg = baselines.SGDConfig(local_steps=2, local_batch=4)
+    diffs["sample_sgd_int8"] = maxdiff(
+        baselines.sample_sgd(mlp.per_sample_loss, params0, dense, cfg,
+                             rounds, rk, **kw),
+        baselines.sample_sgd(mlp.per_sample_loss, params0, vd, cfg,
+                             rounds, rk, cohort=True, **kw))
+    # the full composition: O(S) engine + int8 + EF + sharded cohort axis
+    diffs["alg1_int8_sharded"] = maxdiff(
+        algorithms.algorithm1(mlp.per_sample_loss, params0, dense, fl,
+                              rounds, rk, **kw),
+        algorithms.algorithm1(mlp.per_sample_loss, params0, vd, fl,
+                              rounds, rk, cohort=True,
+                              topology=topology_lib.sharded_for(
+                                  participation), **kw))
+    assert np.isfinite(list(diffs.values())).all()
+    return diffs
+
+
+def scale_sweep(clients_list=FULL_SWEEP, participation: int = 256,
+                rounds: int = 96, repeats: int = 6, traj: bool = True,
+                json_path: str = None, flat_tol: float = 0.10):
+    runners = [(c, _make_runner(c, participation, rounds))
+               for c in clients_list]
+    best = {c: float("inf") for c in clients_list}
+    for _ in range(repeats):                    # interleaved: drift-immune
+        for c, run in runners:
+            best[c] = min(best[c], run())
+
+    sweep = []
+    base_rps = None
+    for clients in clients_list:
+        rps = rounds / best[clients]
+        if base_rps is None:
+            base_rps = rps
+        ratio = rps / base_rps
+        sweep.append({"clients": clients, "rounds_per_s": rps,
+                      "ratio_vs_smallest": ratio})
+        print(f"scale_cohort_I{clients},{1e6 / rps:.1f},"
+              f"rounds_per_s={rps:.1f},ratio={ratio:.3f}", flush=True)
+
+    worst = max(abs(row["ratio_vs_smallest"] - 1.0) for row in sweep)
+    flat_ok = worst <= flat_tol
+    result = {
+        "participation": participation, "rounds": rounds, "repeats": repeats,
+        "sweep": sweep, "max_throughput_deviation": worst,
+        "flatness_claim": "pass" if flat_ok else "fail",
+        "flat_tol": flat_tol,
+    }
+    print(f"scale_cohort_flatness,0,max_deviation={worst:.3f},"
+          f"claim={result['flatness_claim']}", flush=True)
+
+    if traj:
+        diffs = _trajectory_diffs()
+        traj_worst = max(diffs.values())
+        result["trajectory_max_abs_diff"] = diffs
+        result["trajectory_claim"] = "pass" if traj_worst < 1e-5 else "fail"
+        for name, d in diffs.items():
+            print(f"scale_traj_{name},0,max_abs_diff={d:.2e}", flush=True)
+        print(f"scale_traj_equality,0,worst={traj_worst:.2e},"
+              f"claim={result['trajectory_claim']}", flush=True)
+
+    if json_path:
+        from repro.obs import sinks as obs_sinks
+        obs_sinks.bench_json(json_path, result)
+
+    # trajectory equality is the hard invariant on every host
+    if traj:
+        assert traj_worst < 1e-5, (
+            f"O(S) cohort engine diverged from the dense engine: {diffs}")
+    assert flat_ok, (
+        f"rounds/sec not flat in population size: worst deviation {worst:.3f}"
+        f" > {flat_tol} across {[r['clients'] for r in sweep]} "
+        f"({[round(r['rounds_per_s'], 1) for r in sweep]} rounds/s)")
+    return result
+
+
+def scale_smoke():
+    """CI/run.py entry: I up to 1e5, S = 64, ~1-2 min on a laptop CPU."""
+    return scale_sweep(clients_list=SMOKE_SWEEP, participation=64,
+                       rounds=96, repeats=6)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: I <= 1e5, S = 64")
+    ap.add_argument("--participation", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=6)
+    ap.add_argument("--clients", type=int, nargs="+", default=None,
+                    help="population sizes to sweep (overrides --smoke list)")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--skip-traj", action="store_true")
+    ap.add_argument("--maxrss", action="store_true",
+                    help="print MAXRSS_KB=<peak rss> on exit (CI memory-"
+                         "independence probe)")
+    args = ap.parse_args()
+    clients_list = tuple(args.clients) if args.clients else (
+        SMOKE_SWEEP if args.smoke else FULL_SWEEP)
+    participation = args.participation or (64 if args.smoke else 256)
+    rounds = args.rounds or 96
+    try:
+        scale_sweep(clients_list=clients_list, participation=participation,
+                    rounds=rounds, repeats=args.repeats,
+                    traj=not args.skip_traj, json_path=args.json)
+    finally:
+        if args.maxrss:
+            import resource
+            print(f"MAXRSS_KB="
+                  f"{resource.getrusage(resource.RUSAGE_SELF).ru_maxrss}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

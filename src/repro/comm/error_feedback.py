@@ -18,11 +18,25 @@ as part of the carry, wrapped in :class:`CommCarry` next to the optimizer
 state (``core/rounds.py::unwrap_comm`` peels the wrapper when extracting
 params). Under partial participation a non-selected client neither uploads
 nor touches its residual — ``ef_roundtrip(active=...)`` freezes it.
+
+Two layouts exist for the per-client residual matrix:
+
+* the **dense** ``(I, P)`` array (``ef_init_stacked``) — every client's row
+  enters the round compute, non-participants frozen via ``active``; the
+  bit-level reference for small I;
+* the **keyed** :class:`EFStore` (``ef_store_init``) for the O(S) cohort
+  engine (DESIGN.md §14) — the same ``(I, P)`` backing lives OUTSIDE the
+  per-round compute (device-resident by default, host-offloadable behind
+  the same interface); each round gathers the cohort's ``(S, P)`` slice in
+  and scatters the updated slice back, O(S·P) touched per round. A
+  non-participant's row is never read or written, so the two layouts stay
+  bit-equal (pinned in tests/test_cohort.py).
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -41,6 +55,56 @@ def ef_init(dim: int):
 def ef_init_stacked(num_clients: int, dim: int):
     """Per-client residuals for sample-based rounds: one (P,) vector each."""
     return jnp.zeros((num_clients, dim), jnp.float32)
+
+
+class EFStore(NamedTuple):
+    """Keyed per-client residual store for the cohort engine: the (I, P)
+    backing stays out of the round's (S, ...) compute; rounds touch only the
+    cohort's rows via :meth:`gather` / :meth:`scatter`.
+
+    A NamedTuple is a registered pytree, so the store rides the scan carry
+    (inside :class:`CommCarry`) unchanged — and because the scatter is the
+    carry's only use of the backing, XLA donates/aliases the buffer across
+    scan iterations: the update is in-place, not an (I, P) copy per round.
+    """
+    data: jnp.ndarray              # (I, P) residual backing
+
+    @property
+    def num_clients(self):
+        return self.data.shape[0]
+
+    @property
+    def dim(self):
+        return self.data.shape[1]
+
+    def gather(self, ids):
+        """(S,) client ids -> (S, P) residual rows for this round's cohort."""
+        return jnp.take(self.data, ids, axis=0)
+
+    def scatter(self, ids, rows):
+        """Write the cohort's updated rows back; every other client's
+        residual is bit-untouched (never read, never written)."""
+        return self._replace(data=self.data.at[ids].set(rows))
+
+
+def ef_store_init(num_clients: int, dim: int,
+                  host_offload: bool = False) -> EFStore:
+    """Zero-initialized keyed residual store for `fed.cohort_round`.
+
+    ``host_offload=True`` places the backing in the backend's pinned host
+    memory space when one exists (the (I, P) matrix at I = 1e6 can exceed
+    accelerator HBM); gather/scatter keep working behind the identical
+    interface — XLA stages the (S, P) slices through device memory. Falls
+    back to default device placement (with no error) on backends without a
+    pinned_host memory space, so callers never branch."""
+    data = jnp.zeros((num_clients, dim), jnp.float32)
+    if host_offload:
+        try:
+            mem = jax.devices()[0].memory("pinned_host")
+            data = jax.device_put(data, mem)
+        except Exception:       # backend has no pinned_host space — stay put
+            pass
+    return EFStore(data=data)
 
 
 def with_comm_carry(codec, body):

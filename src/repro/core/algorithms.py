@@ -9,7 +9,13 @@ with ρ^t/γ^t threaded through the scan (DESIGN.md §6).
 The sample-based drivers (Algorithms 1/2) take ``participation=S`` to sample
 S of I clients uniformly per round, with the unbiased I/S-reweighted
 N_i/(B_i·N) aggregation of `fed.aggregation_weights`; they accept ragged
-(e.g. Dirichlet-partitioned) client datasets transparently.
+(e.g. Dirichlet-partitioned) client datasets transparently. Adding
+``cohort=True`` switches the round body to the participant-only O(S) engine
+(`fed.cohort_round`, DESIGN.md §14): per-round compute, uploads, and EF
+state scale with S instead of the population I (residuals live in a keyed
+`EFStore`, data may be a `data.synthetic.VirtualFedData` so I = 1e6 never
+materializes), with the dense path's trajectory reproduced to float
+reassociation (atol 1e-5) on the same keys.
 
 Every driver takes ``codec=`` (repro.comm): q-uploads then cross the client
 boundary in the codec's wire format, per-client error-feedback residuals
@@ -37,7 +43,7 @@ import jax.numpy as jnp
 from repro.comm import accounting as comm_accounting
 from repro.comm import codecs as comm_codecs
 from repro.comm.error_feedback import (CommCarry, ef_init, ef_init_stacked,
-                                       with_comm_carry)
+                                       ef_store_init, with_comm_carry)
 from repro.core import fed, optimizer
 from repro.core import rounds as rounds_lib
 from repro.core.fed import FeatureFedData, SampleFedData
@@ -96,9 +102,33 @@ def _wrap_codec_state(state, codec, ef0):
     return CommCarry(opt=state, ef=ef0())
 
 
-def _sample_ef0(params0, num_clients: int):
-    """Zeroed per-client EF residuals for sample-based q-uploads."""
-    return ef_init_stacked(num_clients, comm_codecs.tree_flat_dim(params0))
+def _sample_ef0(params0, num_clients: int, cohort: bool = False):
+    """Zeroed per-client EF residuals for sample-based q-uploads: a dense
+    (I, P) matrix for the reference engine, a keyed `EFStore` (same backing,
+    gathered O(S) rows per round) for the cohort engine."""
+    dim = comm_codecs.tree_flat_dim(params0)
+    if cohort:
+        return ef_store_init(num_clients, dim)
+    return ef_init_stacked(num_clients, dim)
+
+
+def _check_cohort(name: str, cohort: bool, participation):
+    """The cohort engine IS a partial-participation engine — S is its
+    per-round shape; reject cohort=True without participation=S early."""
+    if cohort and participation is None:
+        raise ValueError(
+            f"{name}: cohort=True needs participation=S (the O(S) engine's "
+            "per-round cohort size); pass participation= or drop cohort=")
+
+
+def _cohort_ef_norm(up):
+    """ef_norm for the cohort engine: the norm of the cohort's own updated
+    residual rows (O(S·P)) — NOT the full (I, P) backing, which would put an
+    O(I) reduction back into every round. Stream semantics therefore differ
+    from the dense engine's all-clients norm; don't compare across engines."""
+    return _ef_norm(jax.tree.map(
+        lambda store: store.gather(up["cohort"]), up["ef"],
+        is_leaf=lambda v: hasattr(v, "gather")))
 
 
 def _stat_res(new_params, old_params, gamma_t):
@@ -135,19 +165,27 @@ _NULL_SCHED = _NullSched()
 
 def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
                          participation: Optional[int] = None, codec=None,
-                         topology=None):
+                         topology=None, cohort: bool = False):
     """One full Algorithm-1 round as a pure (state, RoundInputs) step —
     batch selection, uploads (optionally codec-compressed with error
     feedback), aggregation, surrogate recursion, update — suitable for
     lax.scan (rounds.scan_rounds) or per-round dispatch. With a codec the
     state is a CommCarry(opt=SSCAState, ef=(I, P) residuals). topology
-    selects the client-execution engine (DESIGN.md §11)."""
+    selects the client-execution engine (DESIGN.md §11). cohort=True runs
+    the participant-only O(S) engine (fed.cohort_round, DESIGN.md §14):
+    ef becomes a keyed EFStore and topology shards the cohort axis."""
+    _check_cohort("make_algorithm1_step", cohort, participation)
 
     def body(state, inp, ef):
-        grad_est, val_est, up = fed.sample_round(
-            per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            participation=participation, codec=codec, ef=ef,
-            topology=topology)
+        if cohort:
+            grad_est, val_est, up = fed.cohort_round(
+                per_sample_loss, state.params, data, inp.key, fl.batch_size,
+                participation, codec=codec, ef=ef, topology=topology)
+        else:
+            grad_est, val_est, up = fed.sample_round(
+                per_sample_loss, state.params, data, inp.key, fl.batch_size,
+                participation=participation, codec=codec, ef=ef,
+                topology=topology)
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est,
@@ -156,7 +194,8 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
                        up, grad_est, data, participation),
                    "axis_bytes": _axis_bytes_metric(topology, grad_est)}
         if codec is not None:
-            metrics["ef_norm"] = _ef_norm(up["ef"])
+            metrics["ef_norm"] = (_cohort_ef_norm(up) if cohort
+                                  else _ef_norm(up["ef"]))
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -166,11 +205,12 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
                driver: str = "scan", codec=None, topology=None,
-               obs=None) -> RunResult:
+               obs=None, cohort: bool = False) -> RunResult:
     step = make_algorithm1_step(per_sample_loss, data, fl, participation,
-                                codec, topology)
-    state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
-                              lambda: _sample_ef0(params0, data.num_clients))
+                                codec, topology, cohort)
+    state = _wrap_codec_state(
+        optimizer.ssca_init(params0), codec,
+        lambda: _sample_ef0(params0, data.num_clients, cohort))
     return _run(step, state, key, rounds, eval_fn, eval_every,
                 fl=fl, driver=driver, topology=topology, obs=obs)
 
@@ -182,12 +222,20 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
 
 def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
                          participation: Optional[int] = None, codec=None,
-                         topology=None):
+                         topology=None, cohort: bool = False):
+    _check_cohort("make_algorithm2_step", cohort, participation)
+
     def body(state, inp, ef):
-        grad_est, val_est, up = fed.sample_round(
-            per_sample_loss, state.params, data, inp.key, fl.batch_size,
-            with_value=True, participation=participation, codec=codec, ef=ef,
-            topology=topology)
+        if cohort:
+            grad_est, val_est, up = fed.cohort_round(
+                per_sample_loss, state.params, data, inp.key, fl.batch_size,
+                participation, with_value=True, codec=codec, ef=ef,
+                topology=topology)
+        else:
+            grad_est, val_est, up = fed.sample_round(
+                per_sample_loss, state.params, data, inp.key, fl.batch_size,
+                with_value=True, participation=participation, codec=codec,
+                ef=ef, topology=topology)
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
@@ -198,7 +246,8 @@ def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
                    "axis_bytes": _axis_bytes_metric(topology, grad_est,
                                                     with_value=True)}
         if codec is not None:
-            metrics["ef_norm"] = _ef_norm(up["ef"])
+            metrics["ef_norm"] = (_cohort_ef_norm(up) if cohort
+                                  else _ef_norm(up["ef"]))
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -208,11 +257,12 @@ def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
                driver: str = "scan", codec=None, topology=None,
-               obs=None) -> RunResult:
+               obs=None, cohort: bool = False) -> RunResult:
     step = make_algorithm2_step(per_sample_loss, data, fl, participation,
-                                codec, topology)
-    state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
-                              lambda: _sample_ef0(params0, data.num_clients))
+                                codec, topology, cohort)
+    state = _wrap_codec_state(
+        optimizer.ssca_constrained_init(params0), codec,
+        lambda: _sample_ef0(params0, data.num_clients, cohort))
     return _run(step, state, key, rounds, eval_fn, eval_every,
                 fl=fl, driver=driver, topology=topology, obs=obs)
 
@@ -221,26 +271,44 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                        rounds: int, key, eval_fn=None, eval_every: int = 10,
                        participation: Optional[int] = None,
                        driver: str = "scan", codec=None,
-                       topology=None, obs=None) -> RunResult:
+                       topology=None, obs=None,
+                       cohort: bool = False) -> RunResult:
     """Full Algorithm 2: sampled nonconvex objective AND constraint. With a
     codec the objective and constraint q-uploads carry separate EF
     residuals (ef = {"obj": (I, P), "cons": (I, P)}); under a sharded
-    topology both aggregations psum over the client axes (two streams)."""
+    topology both aggregations psum over the client axes (two streams).
+    cohort=True runs both streams through the O(S) engine — the shared
+    participation key makes each stream re-derive the SAME cohort ids, and
+    each stream's residuals live in their own keyed EFStore."""
+    _check_cohort("algorithm2_general", cohort, participation)
+
     def body(state, inp, ef):
         ef = ef if ef is not None else {"obj": None, "cons": None}
         k1, k2 = jax.random.split(inp.key)
         # ONE participant set per round: both the objective and the constraint
         # statistics are uploaded by the same S clients (faithful protocol).
         pk = jax.random.fold_in(inp.key, 0x5ca)
-        og, _, uo = fed.sample_round(obj_loss, state.params, data, k1,
-                                     fl.batch_size, participation=participation,
-                                     participation_key=pk, codec=codec,
-                                     ef=ef["obj"], topology=topology)
-        cg, cv, uc = fed.sample_round(cons_loss, state.params, data, k2,
-                                      fl.batch_size, with_value=True,
-                                      participation=participation,
-                                      participation_key=pk, codec=codec,
-                                      ef=ef["cons"], topology=topology)
+        if cohort:
+            og, _, uo = fed.cohort_round(obj_loss, state.params, data, k1,
+                                         fl.batch_size, participation,
+                                         participation_key=pk, codec=codec,
+                                         ef=ef["obj"], topology=topology)
+            cg, cv, uc = fed.cohort_round(cons_loss, state.params, data, k2,
+                                          fl.batch_size, participation,
+                                          with_value=True,
+                                          participation_key=pk, codec=codec,
+                                          ef=ef["cons"], topology=topology)
+        else:
+            og, _, uo = fed.sample_round(obj_loss, state.params, data, k1,
+                                         fl.batch_size,
+                                         participation=participation,
+                                         participation_key=pk, codec=codec,
+                                         ef=ef["obj"], topology=topology)
+            cg, cv, uc = fed.sample_round(cons_loss, state.params, data, k2,
+                                          fl.batch_size, with_value=True,
+                                          participation=participation,
+                                          participation_key=pk, codec=codec,
+                                          ef=ef["cons"], topology=topology)
         new = optimizer.ssca_general_constrained_step(
             state, og, cg, cv, fl, rho_t=inp.rho, gamma_t=inp.gamma)
         bts = (_sample_upload_bytes(uo, og, data, participation)
@@ -255,14 +323,16 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                                                        with_value=True))}
         new_ef = {"obj": uo["ef"], "cons": uc["ef"]}
         if codec is not None:
-            metrics["ef_norm"] = _ef_norm(new_ef)
+            metrics["ef_norm"] = (
+                _cohort_ef_norm({"cohort": uo["cohort"], "ef": new_ef})
+                if cohort else _ef_norm(new_ef))
         return new, new_ef, metrics
 
     step = with_comm_carry(codec, body)
     state = _wrap_codec_state(
         optimizer.ssca_general_constrained_init(params0), codec,
-        lambda: {"obj": _sample_ef0(params0, data.num_clients),
-                 "cons": _sample_ef0(params0, data.num_clients)})
+        lambda: {"obj": _sample_ef0(params0, data.num_clients, cohort),
+                 "cons": _sample_ef0(params0, data.num_clients, cohort)})
     return _run(step, state, key, rounds, eval_fn, eval_every,
                 fl=fl, driver=driver, topology=topology, obs=obs)
 

@@ -34,9 +34,10 @@ from repro.comm import error_feedback as comm_ef
 from repro.comm.error_feedback import with_comm_carry
 from repro.core import fed
 from repro.core import topology as topology_lib
-from repro.core.algorithms import (RunResult, _feature_axis_bytes,
-                                   _feature_ef0, _feature_upload_bytes, _run,
-                                   _run_feature, _wrap_codec_state)
+from repro.core.algorithms import (RunResult, _check_cohort,
+                                   _feature_axis_bytes, _feature_ef0,
+                                   _feature_upload_bytes, _run, _run_feature,
+                                   _wrap_codec_state)
 from repro.core.fed import FeatureFedData, SampleFedData
 from repro.core.tree import tree_axpy, tree_l2sq, tree_zeros_like
 
@@ -75,20 +76,31 @@ def _reg_grad(per_sample_loss, lam):
 def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
                momentum: bool = False, codec=None, topology=None,
-               obs=None) -> RunResult:
+               obs=None, participation=None, cohort: bool = False) -> RunResult:
     """E local (momentum-)SGD steps per client per round + weighted averaging.
     Each client's upload is its model delta Δ_i = ω_i^local − ω (compressed
     when a codec is given); the server applies ω ← ω + Σ_i (N_i/N) Δ̂_i,
     which equals weighted model averaging because Σ_i w_i = 1. The
     client-local steps + delta uploads + weighted sum run through the
     topology engine (core/topology.py), so ``topology=sharded`` distributes
-    the E local steps of each client over the mesh like the SSCA drivers."""
+    the E local steps of each client over the mesh like the SSCA drivers.
+
+    ``participation=S`` draws S-of-I clients per round (`fed.cohort_sample`
+    under the dense mask), Horvitz-Thompson reweighting the delta average:
+    ω ← ω + (I/S)·Σ_{i∈cohort} (N_i/N) Δ̂_i — unbiased for the full-
+    participation update since E over cohorts recovers every w_i.
+    ``cohort=True`` additionally switches to the participant-only O(S)
+    engine (DESIGN.md §14): only the cohort's shards are gathered (or
+    generated, for a `VirtualFedData`), EF residuals live in a keyed
+    `EFStore`, and the dense trajectory is reproduced to float
+    reassociation on the same keys."""
     grad_fn = _reg_grad(per_sample_loss, cfg.l2_lambda)
     topo = topology if topology is not None else topology_lib.LOCAL
-    w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
+    _check_cohort("sample_sgd", cohort, participation)
+    num_clients = data.num_clients
     dim = comm_codecs.tree_flat_dim(params0)
     up_bytes = float(comm_accounting.sample_round_bytes(
-        dim, data.num_clients, codec)["up"])
+        dim, num_clients, codec, participation=participation)["up"])
 
     def local(params_v0, feat_i, lab_i, count_i, k, lr):
         def one(step, carry):
@@ -109,27 +121,52 @@ def sample_sgd(per_sample_loss, params0, data: SampleFedData, cfg: SGDConfig,
 
     def body(state, inp, ef):
         lr = cfg.lr_a if momentum else _lr(cfg, state.t)
-        keys = jax.random.split(inp.key, data.num_clients)
 
         def client_fn(f_, l_, c_, k_):
             p_local, _ = local(state.params, f_, l_, c_, k_, lr)
             delta = jax.tree.map(lambda u, p: u - p, p_local, state.params)
             return delta, jnp.zeros((), jnp.float32)
 
-        ckeys = (jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
-                                  data.num_clients)
-                 if codec is not None else None)
-        s = topo.weighted_sum(client_fn,
-                              (data.features, data.labels, data.counts, keys),
-                              w, codec=codec, ef=ef, codec_keys=ckeys)
+        ck = jax.random.fold_in(inp.key, 0xC0DEC)
+        if cohort:
+            pk = jax.random.fold_in(inp.key, 0x5ca)
+            ids = fed.cohort_sample(pk, num_clients, participation)
+            feats, labs, counts_s = data.shards_for(ids)
+            keys = fed.client_keys(inp.key, ids)
+            w = ((num_clients / participation)
+                 * counts_s.astype(jnp.float32) / data.total)
+            ckeys = fed.client_keys(ck, ids) if codec is not None else None
+            ef_rows = (ef.gather(ids)
+                       if codec is not None and ef is not None else None)
+            s = topo.weighted_sum(client_fn, (feats, labs, counts_s, keys), w,
+                                  codec=codec, ef=ef_rows, codec_keys=ckeys)
+            new_ef = (ef.scatter(ids, s.ef)
+                      if codec is not None and ef is not None else s.ef)
+        else:
+            keys = fed.client_keys(inp.key, jnp.arange(num_clients))
+            w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
+            active = None
+            if participation is not None and participation < num_clients:
+                pmask = fed.participation_mask(
+                    jax.random.fold_in(inp.key, 0x5ca), num_clients,
+                    participation)
+                w = w * pmask * (num_clients / jnp.sum(pmask))
+                active = pmask
+            ckeys = (fed.client_keys(ck, jnp.arange(num_clients))
+                     if codec is not None else None)
+            s = topo.weighted_sum(
+                client_fn, (data.features, data.labels, data.counts, keys),
+                w, codec=codec, ef=ef, codec_keys=ckeys, active=active)
+            new_ef = s.ef
         params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
                               state.params, s.weighted)
         new = SGDState(params=params, t=state.t + 1)
-        return new, s.ef, {"upload_bytes": up_bytes}
+        return new, new_ef, {"upload_bytes": up_bytes}
 
     state = _wrap_codec_state(
         SGDState(params=params0, t=jnp.ones((), jnp.int32)), codec,
-        lambda: comm_ef.ef_init_stacked(data.num_clients, dim))
+        lambda: (comm_ef.ef_store_init(num_clients, dim) if cohort
+                 else comm_ef.ef_init_stacked(num_clients, dim)))
     return _run(with_comm_carry(codec, body), state, key, rounds, eval_fn,
                 eval_every, topology=topology, obs=obs)
 

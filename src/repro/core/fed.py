@@ -18,6 +18,17 @@ and aggregates — what crosses the boundary is the codec's wire format, and
 DESIGN.md §11), selecting whether its clients run under a single-device vmap
 or device-sharded over the mesh via shard_map with the aggregation as a
 weighted psum — same math, same uploads surface, same wire bytes.
+
+``cohort_round`` is the participant-only realization of the same protocol
+(DESIGN.md §14): instead of computing every client and zero-masking the
+non-participants server-side, it draws the S-client cohort in O(S) work
+(``cohort_sample``, a keyed Feistel permutation over the virtual population
+— no length-I permutation, no dense mask), gathers only the cohort's data
+and error-feedback residuals, and runs client compute / codec encode / the
+weighted aggregation over the (S, ...) cohort axis. Per-round compute and
+carried state scale with S, not I; the unbiased I/S Horvitz-Thompson
+reweighting of eq. (9) is preserved, and at small I the trajectory matches
+``sample_round`` on the same keys (atol 1e-5 — reassociation only).
 """
 from __future__ import annotations
 
@@ -46,6 +57,31 @@ class SampleFedData(NamedTuple):
     @property
     def total(self):
         return jnp.sum(self.counts)
+
+    # -- cohort-engine data view (DESIGN.md §14) ---------------------------
+    # The O(S) cohort engine never touches the population axis: it asks the
+    # data container for exactly the cohort's slice. A virtual population
+    # (data/synthetic.VirtualFedData) implements the same three methods by
+    # GENERATING the slice from (base key, client id) instead of gathering.
+
+    def counts_for(self, ids):
+        """(S,) true N_i for the given client ids."""
+        return jnp.take(self.counts, ids, axis=0)
+
+    def batch_rows(self, ids, idx):
+        """Cohort mini-batches: (S,) ids + (S, B) in-shard row indices ->
+        ((S, B, P) features, (S, B, L) labels). Row values are identical to
+        ``take(features[i], idx_i)`` on the dense shard."""
+        return (self.features[ids[:, None], idx],
+                self.labels[ids[:, None], idx])
+
+    def shards_for(self, ids):
+        """Full padded shards for the cohort: ((S, N_max, P), (S, N_max, L),
+        (S,) counts) — for drivers whose clients loop over local batches
+        (baselines.sample_sgd, local_updates)."""
+        return (jnp.take(self.features, ids, axis=0),
+                jnp.take(self.labels, ids, axis=0),
+                jnp.take(self.counts, ids, axis=0))
 
 
 class FeatureFedData(NamedTuple):
@@ -179,13 +215,90 @@ def _check_ef_shape(round_name: str, stream: str, residual, expected_shape):
 
 
 # ---------------------------------------------------------------------------
+# O(S) cohort sampling: keyed Feistel permutation over the virtual population
+# ---------------------------------------------------------------------------
+
+
+def _feistel_mix(x):
+    """murmur3 finalizer on uint32 — the Feistel round function's hash."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _feistel(x, round_keys, hi_bits: int, lo_bits: int):
+    """Alternating (unbalanced) keyed Feistel network: a bijection on
+    [0, 2^(hi_bits+lo_bits)) for ANY round function — each round modularly
+    adds a hash of one half to the other, which is invertible regardless of
+    the hash. The unbalanced split lets the domain be 2^ceil(log2 I) rather
+    than the next even power of two, so cycle-walking rejects < 50% of
+    values at every population size (a balanced network's domain can
+    overshoot I by almost 4x, tripling the expected walk length)."""
+    lo_mask = jnp.uint32((1 << lo_bits) - 1)
+    hi_mask = jnp.uint32((1 << hi_bits) - 1)
+    hi, lo = x >> lo_bits, x & lo_mask
+    for r in range(round_keys.shape[0]):
+        if r % 2 == 0:
+            lo = (lo + _feistel_mix(hi ^ round_keys[r])) & lo_mask
+        else:
+            hi = (hi + _feistel_mix(lo ^ round_keys[r])) & hi_mask
+    return (hi << lo_bits) | lo
+
+
+_FEISTEL_ROUNDS = 6
+_FEISTEL_MIN_BITS = 8         # >= 8-bit domain: better mixing for tiny I
+
+
+def cohort_sample(key, num_clients: int, cohort: int):
+    """Draw S = `cohort` client ids uniformly without replacement from a
+    population of `num_clients` in O(S) work — no length-I permutation.
+
+    The keyed Feistel permutation π is a bijection on the power-of-two
+    domain 2^ceil(log2 I) >= I; the cohort is {walk(π(0)), ..., walk(π(S-1))}
+    where `walk` cycle-walks π until the value lands inside [0, I) (expected
+    < 2 steps: the domain is < 2·I). A fresh key gives an independent
+    pseudorandom permutation, so each client appears in the cohort w.p.
+    exactly S/I (pinned statistically in tests/test_cohort.py). This is what
+    lets the participation draw — and everything keyed off it — scale with
+    the cohort instead of the population (DESIGN.md §14).
+    """
+    if not 1 <= cohort <= num_clients:
+        raise ValueError(f"cohort must be in [1, {num_clients}], got {cohort}")
+    bits = max(_FEISTEL_MIN_BITS, max(num_clients - 1, 1).bit_length())
+    lo_bits, hi_bits = bits // 2, bits - bits // 2
+    round_keys = jax.random.bits(key, (_FEISTEL_ROUNDS,), jnp.uint32)
+    n = jnp.uint32(num_clients)
+
+    def perm(x):
+        return _feistel(x, round_keys, hi_bits, lo_bits)
+
+    def one(i):
+        return jax.lax.while_loop(lambda x: x >= n, perm, perm(i))
+
+    ids = jax.vmap(one)(jnp.arange(cohort, dtype=jnp.uint32))
+    return ids.astype(jnp.int32)
+
+
+def client_keys(key, ids):
+    """Per-client PRNG keys keyed by STABLE client id (fold_in, not split):
+    the dense engine (ids = arange(I)) and the cohort engine (ids = the S
+    drawn ids) derive the identical key for the same client, which is what
+    makes their trajectories comparable round for round."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+# ---------------------------------------------------------------------------
 # sample-based rounds (Algorithm 1/2 steps 3-4)
 # ---------------------------------------------------------------------------
 
 
 def sample_batches(data: SampleFedData, key, batch_size: int):
-    """Step 4: each client randomly selects a mini-batch N_i^(t)."""
-    keys = jax.random.split(key, data.num_clients)
+    """Step 4: each client randomly selects a mini-batch N_i^(t). Keys are
+    derived per client id (`client_keys`) so the cohort engine draws the
+    same batch for the same client."""
+    keys = client_keys(key, jnp.arange(data.num_clients))
 
     def pick(k, count):
         return jax.random.randint(k, (batch_size,), 0, count)
@@ -205,8 +318,13 @@ def batch_mask(counts, batch_size: int):
 
 def participation_mask(key, num_clients: int, participation: int):
     """0/1 mask selecting S = `participation` of I clients uniformly without
-    replacement (each client included w.p. S/I)."""
-    sel = jax.random.permutation(key, num_clients)[:participation]
+    replacement (each client included w.p. S/I).
+
+    The selection is ``cohort_sample`` — O(S) RNG work, not the former
+    O(I log I) full permutation — scattered into a dense mask. The dense
+    engine and the cohort engine therefore draw the SAME S clients from the
+    same key, which is what makes their trajectories comparable."""
+    sel = cohort_sample(key, num_clients, participation)
     return jnp.zeros((num_clients,), jnp.float32).at[sel].set(1.0)
 
 
@@ -293,7 +411,7 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     if codec is not None:
         if codec_key is None:
             codec_key = jax.random.fold_in(key, 0xC0DEC)
-        ckeys = jax.random.split(codec_key, data.num_clients)
+        ckeys = client_keys(codec_key, jnp.arange(data.num_clients))
         active = pmask if pmask is not None else jnp.ones((data.num_clients,))
         nbytes = comm_accounting.sample_round_bytes(
             comm_codecs.tree_flat_dim(params), data.num_clients, codec,
@@ -304,6 +422,111 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     uploads = {"q_grad_sums": s.uploads,
                "q_value_sums": s.values if with_value else None,
                "participants": pmask, "encoded": s.encoded, "ef": s.ef,
+               "upload_nbytes": nbytes}
+    return s.weighted, s.value, uploads
+
+
+def cohort_weights(counts_s, batch_size: int, num_clients: int, total):
+    """Horvitz-Thompson server weights for the S-client cohort:
+    w_i = (I/S)·N_i/(B_i·N). Identical numbers to the non-zero entries of
+    ``aggregation_weights(counts, B, pmask)`` on the dense path — the cohort
+    engine just never materializes the zeros."""
+    counts_s = counts_s.astype(jnp.float32)
+    b_i = jnp.minimum(counts_s, batch_size)
+    scale = num_clients / counts_s.shape[0]
+    return scale * counts_s / (b_i * total)
+
+
+def cohort_round(per_sample_loss: Callable, params, data, key,
+                 batch_size: int, cohort: int, with_value: bool = False,
+                 participation_key=None, codec=None, ef=None, codec_key=None,
+                 topology=None):
+    """Participant-only O(S) realization of :func:`sample_round` under
+    partial participation (DESIGN.md §14).
+
+    Where ``sample_round(participation=S)`` computes all I clients and
+    zero-masks I−S of them server-side, this draws the S-client cohort in
+    O(S) work (`cohort_sample`), gathers ONLY the cohort's data shards
+    (``data.batch_rows`` — a `SampleFedData` gathers rows, a
+    `data.synthetic.VirtualFedData` generates them from the client id, so
+    I = 1e6 never materializes anything population-sized), and runs client
+    compute, codec encode, and the eq.-(9) weighted aggregation over the
+    (S, ...) cohort axis. Per-round compute and carried state scale with S.
+
+    Equality contract (pinned in tests/test_cohort.py and
+    benchmarks/scale_bench.py): with the same `key`/`participation_key`/
+    `codec_key`, the same clients are drawn (`participation_mask` scatters
+    the same `cohort_sample` ids), each drawn client derives the same batch
+    and codec keys (`client_keys` folds in the stable client id), and the
+    Horvitz-Thompson weights match the dense masked weights entry-for-entry
+    — so grad/value estimates agree with the dense engine up to float
+    reassociation (atol 1e-5: an S-term sum vs an I-term sum with zeros).
+
+    ``ef`` is a :class:`repro.comm.error_feedback.EFStore` holding the
+    (I, P) residual backing; only the cohort's (S, P) slice is gathered
+    into the round and scattered back — non-participants' residuals are
+    never touched (bit-frozen by construction, not by masking). The updated
+    store comes back as ``uploads["ef"]``.
+
+    ``topology=`` shards the COHORT axis: a `ShardedTopology` splits the S
+    participants over the mesh (S must divide by the shard count), so
+    population size never constrains the mesh fit.
+
+    Returns (grad_est, value_est, uploads); ``uploads["cohort"]`` is the
+    (S,) drawn client ids — the O(S) analog of the dense path's
+    ``uploads["participants"]`` mask.
+    """
+    _check_codec_args("cohort_round", codec, ef)
+    topo = topology if topology is not None else topology_lib.LOCAL
+    num_clients = data.num_clients
+    if participation_key is None:
+        participation_key = jax.random.fold_in(key, 0x5ca)
+    with obs_trace.phase("cohort-select"):
+        ids = cohort_sample(participation_key, num_clients, cohort)   # (S,)
+        counts_s = data.counts_for(ids)                               # (S,)
+    with obs_trace.phase("batch-select"):
+        bkeys = client_keys(key, ids)
+        idx = jax.vmap(
+            lambda k, c: jax.random.randint(k, (batch_size,), 0, c)
+        )(bkeys, counts_s)                                            # (S, B)
+        bmask = batch_mask(counts_s, batch_size)                      # (S, B)
+        zb, yb = data.batch_rows(ids, idx)            # (S, B, P), (S, B, L)
+
+    def client(zb_i, yb_i, mask_i):
+        def batch_sum_loss(p):
+            return jnp.sum(per_sample_loss(p, zb_i, yb_i) * mask_i)
+
+        val, q = jax.value_and_grad(batch_sum_loss)(params)
+        return q, val
+
+    ckeys = active = ef_rows = None
+    nbytes = None
+    if codec is not None:
+        dim = comm_codecs.tree_flat_dim(params)
+        if ef is not None:
+            if not hasattr(ef, "gather"):
+                raise ValueError(
+                    "cohort_round: ef must be a keyed "
+                    "repro.comm.error_feedback.EFStore (ef_store_init), not "
+                    f"a dense residual array — got {type(ef).__name__}")
+            _check_ef_shape("cohort_round", "q_grad", ef.data,
+                            (num_clients, dim))
+            ef_rows = ef.gather(ids)                                  # (S, P)
+        if codec_key is None:
+            codec_key = jax.random.fold_in(key, 0xC0DEC)
+        ckeys = client_keys(codec_key, ids)
+        active = jnp.ones((cohort,), jnp.float32)
+        nbytes = comm_accounting.sample_round_bytes(
+            dim, num_clients, codec, participation=cohort,
+            with_value=with_value)["up"]
+    w = cohort_weights(counts_s, batch_size, num_clients, data.total)
+    s = topo.weighted_sum(client, (zb, yb, bmask), w, codec=codec,
+                          ef=ef_rows, codec_keys=ckeys, active=active)
+    new_ef = ef.scatter(ids, s.ef) if (codec is not None
+                                       and ef is not None) else s.ef
+    uploads = {"q_grad_sums": s.uploads,
+               "q_value_sums": s.values if with_value else None,
+               "cohort": ids, "encoded": s.encoded, "ef": new_ef,
                "upload_nbytes": nbytes}
     return s.weighted, s.value, uploads
 

@@ -20,8 +20,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import fed
 from repro.core import topology as topology_lib
-from repro.core.algorithms import RunResult, _run
+from repro.core.algorithms import RunResult, _check_cohort, _run
 from repro.core.fed import SampleFedData
 from repro.core.tree import tree_zeros_like
 
@@ -35,12 +36,22 @@ class LocalSSCAState(NamedTuple):
 def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
                      rounds: int, key, *, local_steps: int = 4,
                      eval_fn=None, eval_every: int = 10,
-                     topology=None, obs=None) -> RunResult:
+                     topology=None, obs=None, participation=None,
+                     cohort: bool = False) -> RunResult:
     """Algorithm 1 with E local SSCA (momentum-form) refinements per round.
     ``topology=`` runs the E-step client loops on the mesh (the upload here
-    is the {model, momentum} pair, both N_i/N weighted-summed)."""
+    is the {model, momentum} pair, both N_i/N weighted-summed).
+
+    ``participation=S`` averages over an S-client cohort with COHORT-
+    normalized weights N_i/Σ_{j∈cohort} N_j — the uploads are full models,
+    so the weights must stay a convex combination (Horvitz-Thompson
+    inflation would overshoot the iterate); this is standard FedAvg-style
+    cohort averaging, unbiased only conditionally on the draw. ``cohort=
+    True`` runs it as the participant-only O(S) engine (DESIGN.md §14),
+    reproducing the dense masked trajectory to float reassociation."""
     topo = topology if topology is not None else topology_lib.LOCAL
-    w = data.counts.astype(jnp.float32) / jnp.sum(data.counts)
+    _check_cohort("algorithm1_local", cohort, participation)
+    num_clients = data.num_clients
 
     def local(params, v, feat_i, lab_i, count_i, k, rho_t, gamma_t):
         def one(step, carry):
@@ -62,17 +73,34 @@ def algorithm1_local(per_sample_loss, params0, data: SampleFedData, fl,
 
     def step(state, inp):
         rho_t, gamma_t = inp.rho, inp.gamma
-        keys = jax.random.split(inp.key, data.num_clients)
 
         def client_fn(f_, l_, c_, k_):
             p_i, v_i = local(state.params, state.v, f_, l_, c_, k_,
                              rho_t, gamma_t)
             return {"params": p_i, "v": v_i}, jnp.zeros((), jnp.float32)
 
-        # server: weighted model/momentum averaging (uploads: d floats each)
-        s = topo.weighted_sum(client_fn,
-                              (data.features, data.labels, data.counts, keys),
-                              w)
+        # server: weighted model/momentum averaging (uploads: d floats each);
+        # the weights are cohort-normalized to a convex combination in every
+        # participation mode (see docstring)
+        if cohort:
+            pk = jax.random.fold_in(inp.key, 0x5ca)
+            ids = fed.cohort_sample(pk, num_clients, participation)
+            feats, labs, counts_s = data.shards_for(ids)
+            keys = fed.client_keys(inp.key, ids)
+            cf = counts_s.astype(jnp.float32)
+            s = topo.weighted_sum(client_fn, (feats, labs, counts_s, keys),
+                                  cf / jnp.sum(cf))
+        else:
+            keys = fed.client_keys(inp.key, jnp.arange(num_clients))
+            cf = data.counts.astype(jnp.float32)
+            if participation is not None and participation < num_clients:
+                pmask = fed.participation_mask(
+                    jax.random.fold_in(inp.key, 0x5ca), num_clients,
+                    participation)
+                cf = cf * pmask
+            s = topo.weighted_sum(
+                client_fn, (data.features, data.labels, data.counts, keys),
+                cf / jnp.sum(cf))
         return LocalSSCAState(params=s.weighted["params"], v=s.weighted["v"],
                               t=state.t + 1), {}
 

@@ -8,7 +8,15 @@ local-update extension) has one structural invariant: every round is
 
 with w_i = N_i/(B_i·N) (eq. 9's aggregation, generalized to ragged clients
 and Horvitz-Thompson participation reweighting). This module abstracts that
-shape behind one contract, ``weighted_sum``, with two realizations:
+shape behind one contract, ``weighted_sum``, with two realizations.
+
+``weighted_sum`` is leading-axis-generic: the dense engine passes
+(I, ...)-leading args (every client in the population), the O(S) cohort
+engine (``fed.cohort_round``, DESIGN.md §14) passes the (S, ...)-leading
+cohort slice — client execution, codec encode, and the weighted psum then
+run over S participants only, and a `ShardedTopology` shards the COHORT
+(S must divide the shard count; population size never constrains the mesh).
+The two realizations:
 
 * :class:`LocalTopology` — all I clients on one device, `jax.vmap` over the
   client axis, `jnp.tensordot` for the server sum. Bit-for-bit the engine
@@ -239,12 +247,19 @@ class ShardedTopology:
         sh = self.client_sharding()
 
         def put(x):
+            # a keyed EFStore (cohort engine, DESIGN.md §14) is indexed by
+            # POPULATION id — what shards is the (S, P) cohort slice inside
+            # weighted_sum, so the backing stays replicated/default-placed
+            if isinstance(x, comm_ef.EFStore):
+                return x
             if (hasattr(x, "ndim") and x.ndim >= 1
                     and x.shape[0] % self.num_shards == 0):
                 return jax.device_put(x, sh)
             return x
 
-        return state._replace(ef=jax.tree.map(put, state.ef))
+        return state._replace(
+            ef=jax.tree.map(put, state.ef,
+                            is_leaf=lambda v: isinstance(v, comm_ef.EFStore)))
 
     def weighted_sum(self, client_fn: Callable, args, weights, *,
                      codec=None, ef=None, codec_keys=None,

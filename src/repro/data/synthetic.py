@@ -63,6 +63,135 @@ def federated_classification_dataset(key, num_clients: int, n: int = 60_000,
     return data, train, test
 
 
+class VirtualFedData:
+    """Virtual federated population: client shards DERIVED on the fly from
+    (base key, client id) instead of stored — so ``--clients 1000000`` never
+    materializes a dataset (DESIGN.md §14).
+
+    Statistics match `federated_classification_dataset`'s heterogeneity
+    regime: class-conditional Gaussians over shared prototypes, per-client
+    label skew probs ~ Dirichlet(α·1_L), ragged shard sizes
+    N_i ~ Uniform{n_min..n_max}. Every row is a pure deterministic function
+    of (key, client id, row index), so
+
+    * the O(S) cohort engine can ask for exactly the cohort's rows
+      (`counts_for`/`batch_rows`/`shards_for` — the same three-method data
+      view `core.fed.SampleFedData` implements by gathering), touching O(S)
+      state per round, and
+    * `materialize()` produces the bit-identical dense `SampleFedData`
+      (same row values, same zero padding) for small populations — the
+      equality reference tests/test_cohort.py and benchmarks/scale_bench.py
+      pin the cohort engine against.
+
+    ``total`` (the population sample count N in eq. 9's weights) is reduced
+    once at construction in fixed-size id chunks — no (I,)-shaped array is
+    ever built, keeping construction O(I/chunk) dispatches and O(chunk)
+    memory even at I = 1e6.
+    """
+
+    def __init__(self, key, num_clients: int, n_min: int = 8,
+                 n_max: int = 32, num_features: int = 16,
+                 num_classes: int = 4, noise: float = 1.0,
+                 alpha: float = 0.5):
+        if n_min < 1 or n_max < n_min:
+            raise ValueError(f"need 1 <= n_min <= n_max, got [{n_min}, {n_max}]")
+        self.key = key
+        self.num_clients = int(num_clients)
+        self.n_min, self.n_max = int(n_min), int(n_max)
+        self.num_features, self.num_classes = int(num_features), int(num_classes)
+        self.noise, self.alpha = float(noise), float(alpha)
+        self.protos = (jax.random.normal(
+            jax.random.fold_in(key, 0x9707), (num_classes, num_features))
+            / jnp.sqrt(num_features))
+        self.total = int(self._population_total())
+
+    # -- per-client generators (each a pure function of the client id) -----
+
+    def _client_key(self, i):
+        return jax.random.fold_in(self.key, i)
+
+    def _count(self, i):
+        """True N_i ~ Uniform{n_min..n_max}, keyed by client id."""
+        ck = self._client_key(i)
+        return (self.n_min + jax.random.randint(
+            jax.random.fold_in(ck, 2), (), 0, self.n_max - self.n_min + 1)
+        ).astype(jnp.int32)
+
+    def _log_probs(self, ck):
+        """Client label-skew: log p ~ log Dirichlet(α·1_L)."""
+        probs = jax.random.dirichlet(
+            jax.random.fold_in(ck, 1),
+            self.alpha * jnp.ones((self.num_classes,)))
+        return jnp.log(probs)
+
+    def _row(self, ck, log_probs, r):
+        """Row r of a client's shard: label ~ Categorical(p_client), feature
+        = prototype + Gaussian noise. Purely (client key, row index)-keyed,
+        so cohort gathers and dense materialization agree bitwise."""
+        kr = jax.random.fold_in(jax.random.fold_in(ck, 3), r)
+        label = jax.random.categorical(kr, log_probs)
+        z = (self.protos[label] + self.noise * jax.random.normal(
+            jax.random.fold_in(kr, 1), (self.num_features,))
+            / jnp.sqrt(self.num_features))
+        return z, jax.nn.one_hot(label, self.num_classes)
+
+    def _client_rows(self, i, idx):
+        ck = self._client_key(i)
+        lp = self._log_probs(ck)
+        return jax.vmap(lambda r: self._row(ck, lp, r))(idx)
+
+    def _population_total(self):
+        """Σ_i N_i reduced in 4096-id chunks — never an (I,) array."""
+        chunk = 4096
+        num_chunks = -(-self.num_clients // chunk)
+
+        def body(c, acc):
+            ids = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            counts = jax.vmap(self._count)(ids)
+            return acc + jnp.sum(
+                jnp.where(ids < self.num_clients, counts, 0))
+
+        return jax.lax.fori_loop(0, num_chunks, body, jnp.zeros((), jnp.int32))
+
+    # -- the cohort data view (same contract as SampleFedData) -------------
+
+    def counts_for(self, ids):
+        """(S,) true N_i for the given client ids."""
+        return jax.vmap(self._count)(ids)
+
+    def batch_rows(self, ids, idx):
+        """(S,) ids + (S, B) row indices -> ((S, B, P), (S, B, L)), each row
+        generated directly — bitwise what `materialize()` would store."""
+        return jax.vmap(self._client_rows)(ids, idx)
+
+    def shards_for(self, ids):
+        """Full padded shards for the cohort: rows r >= N_i are zero, exactly
+        matching the dense container's padding convention."""
+        counts = self.counts_for(ids)
+        rows = jnp.arange(self.n_max, dtype=jnp.int32)
+        feats, labs = jax.vmap(
+            lambda i: self._client_rows(i, rows))(ids)
+        valid = (rows[None, :] < counts[:, None])
+        return (feats * valid[:, :, None], labs * valid[:, :, None], counts)
+
+    def materialize(self, max_scalars: int = 50_000_000):
+        """Dense `SampleFedData` with identical row values and padding — the
+        small-I equality reference. Refuses population sizes whose dense
+        form would not fit (that regime is the whole point of this class)."""
+        from repro.core import fed
+
+        scalars = (self.num_clients * self.n_max
+                   * (self.num_features + self.num_classes))
+        if scalars > max_scalars:
+            raise ValueError(
+                f"materialize() would build ~{scalars:.2e} scalars for "
+                f"I={self.num_clients} — the virtual view exists so this "
+                "never happens; use the cohort engine instead")
+        ids = jnp.arange(self.num_clients, dtype=jnp.int32)
+        feats, labs, counts = self.shards_for(ids)
+        return fed.SampleFedData(feats, labs, counts)
+
+
 def token_dataset(key, vocab_size: int, n_tokens: int, order: int = 1):
     """Markov bigram stream: next-token depends on current via a random sparse
     transition; gives a learnable LM signal with nonzero optimal loss."""

@@ -40,6 +40,13 @@ codec, per-dispatch HLO cost) next to it, and interleaves host-span timing
 rows; ``--log-every N`` thins the stream; ``--profile DIR`` wraps the run in
 a jax.profiler trace whose timeline carries the protocol phase annotations.
 
+Cohort mode (DESIGN.md §14): ``--mode cohort --clients 1000000
+--participation 256`` runs horizontal FL over a VIRTUAL population — client
+shards derived on the fly from the client id (`data.synthetic
+.VirtualFedData`), the S-client cohort drawn in O(S) by a keyed Feistel
+permutation, EF residuals in a keyed store gathered/scattered per round —
+so per-round compute and state scale with S while I goes to a million.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
           [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
@@ -48,6 +55,9 @@ CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
       PYTHONPATH=src python -m repro.launch.train --mode feature \
           --clients 4 --steps 200 [--constrained --cost-limit 1.2] \
           [--topology sharded] [--codec int8] [--driver scan|loop]
+      PYTHONPATH=src python -m repro.launch.train --mode cohort \
+          --clients 1000000 --participation 256 --steps 100 \
+          [--constrained] [--codec int8] [--topology sharded]
 """
 from __future__ import annotations
 
@@ -394,17 +404,109 @@ def feature_train_loop(*, clients: int = 4, rounds: int = 200,
     return result
 
 
+# ---------------------------------------------------------------------------
+# cohort-engine (million-client horizontal FL) training driver — DESIGN.md §14
+# ---------------------------------------------------------------------------
+
+
+def cohort_train_loop(*, clients: int = 100_000, participation: int = 256,
+                      rounds: int = 200, batch: int = 16, features: int = 32,
+                      classes: int = 4, hidden: int = 16,
+                      constrained: bool = False, cost_limit: float = 1.2,
+                      topology: str = "local", codec: Optional[str] = None,
+                      topk_frac: float = 0.01, codec_impl: str = "ref",
+                      driver: str = "scan", log_every: int = 20,
+                      seed: int = 0, fl: Optional[FLConfig] = None,
+                      log_jsonl: Optional[str] = None,
+                      log_stream_every: int = 1,
+                      profile_dir: Optional[str] = None):
+    """Million-client horizontal FL driver: a `VirtualFedData` population of
+    ``clients`` ragged Dirichlet-skewed shards (never materialized — every
+    row derives from the client id), Algorithm 1 (or 2 with --constrained)
+    through the participant-only O(S) cohort engine. Per-round compute,
+    uploads, and EF state scale with ``participation``, not ``clients`` —
+    ``--clients 1000000 --participation 256`` runs on a laptop. Returns the
+    RunResult."""
+    from repro.core import algorithms
+    from repro.data.synthetic import VirtualFedData
+    from repro.models import mlp
+
+    key = jax.random.PRNGKey(seed)
+    data = VirtualFedData(jax.random.fold_in(key, 0xDA7A), clients,
+                          num_features=features, num_classes=classes,
+                          noise=4.0)
+    params0 = mlp.init(jax.random.fold_in(key, 1), features, hidden, classes)
+    fl = fl or FLConfig(batch_size=batch, a1=0.9, a2=0.5, alpha_rho=0.1,
+                        alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5,
+                        constrained=constrained, cost_limit=cost_limit,
+                        penalty_c=1e4)
+    # a sharded topology splits the COHORT over devices — the population
+    # size never constrains the mesh fit
+    topo = (topology_lib.sharded_for(participation)
+            if topology == "sharded" else None)
+    codec_obj = make_codec(codec, topk_frac=topk_frac, impl=codec_impl)
+
+    # fixed O(1)-sized eval probe: the first 64 clients' shards, masked mean
+    eval_ids = jnp.arange(min(64, clients), dtype=jnp.int32)
+    ez, ey, ec = data.shards_for(eval_ids)
+    emask = (jnp.arange(ez.shape[1])[None, :] < ec[:, None]).astype(jnp.float32)
+
+    def eval_fn(p, s):
+        per_row = jax.vmap(lambda z, y: mlp.per_sample_loss(p, z, y))(ez, ey)
+        return {"loss": float(jnp.sum(per_row * emask) / jnp.sum(emask))}
+
+    alg = algorithms.algorithm2 if constrained else algorithms.algorithm1
+    stream, spans, prof = _make_stream(log_jsonl, log_stream_every,
+                                       profile_dir, name="cohort")
+    if log_jsonl:
+        obs_sinks.write_manifest(
+            log_jsonl + ".manifest.json",
+            config={"mode": "cohort", "clients": clients,
+                    "participation": participation, "rounds": rounds,
+                    "batch": batch, "features": features, "classes": classes,
+                    "hidden": hidden, "constrained": constrained,
+                    "cost_limit": cost_limit, "driver": driver, "seed": seed},
+            codec=codec_obj, topology=topo)
+    wall0 = time.time()
+    with prof, spans.span("run", rounds=rounds):
+        result = alg(mlp.per_sample_loss, params0, data, fl, rounds,
+                     jax.random.fold_in(key, 2), eval_fn=eval_fn,
+                     eval_every=log_every, participation=participation,
+                     driver=driver, codec=codec_obj, topology=topo,
+                     obs=stream if log_jsonl else None, cohort=True)
+    stream.close()
+    for i, r in enumerate(result.history["round"]):
+        line = {k: float(v[i]) for k, v in result.history.items()
+                if not k.startswith("round")}
+        line["round"] = int(r)
+        print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in line.items()), flush=True)
+    shards = topo.num_shards if topo is not None else 1
+    print(f"done: {rounds} rounds, population {clients}, cohort "
+          f"{participation} over {shards} shard(s), "
+          f"{time.time() - wall0:.1f}s", flush=True)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
                     help="model zoo arch (required for --mode sample)")
-    ap.add_argument("--mode", choices=("sample", "feature"),
+    ap.add_argument("--mode", choices=("sample", "feature", "cohort"),
                     default="sample",
                     help="sample = horizontal FL on a zoo model (Alg 1/2); "
                          "feature = vertical FL, features split across "
-                         "clients (Alg 3/4, DESIGN.md §12)")
+                         "clients (Alg 3/4, DESIGN.md §12); cohort = "
+                         "million-client horizontal FL through the "
+                         "participant-only O(S) engine over a virtual "
+                         "population (DESIGN.md §14)")
     ap.add_argument("--clients", type=int, default=4,
-                    help="feature-mode vertical client count")
+                    help="feature-mode vertical client count, or cohort-mode "
+                         "population size I (e.g. 1000000 — never "
+                         "materialized)")
+    ap.add_argument("--participation", type=int, default=256,
+                    help="cohort-mode per-round cohort size S (per-round "
+                         "state and compute scale with S, not --clients)")
     ap.add_argument("--features", type=int, default=128)
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--hidden", type=int, default=32)
@@ -443,6 +545,20 @@ def main():
                     help="jax.profiler trace of the whole run into DIR "
                          "(phase-annotated; open with xprof/perfetto)")
     args = ap.parse_args()
+    if args.mode == "cohort":
+        cohort_train_loop(clients=args.clients,
+                          participation=args.participation,
+                          rounds=args.steps, batch=args.batch,
+                          features=args.features, classes=args.classes,
+                          hidden=args.hidden, constrained=args.constrained,
+                          cost_limit=args.cost_limit,
+                          topology=args.topology, codec=args.codec,
+                          topk_frac=args.topk_frac,
+                          codec_impl=args.codec_impl, driver=args.driver,
+                          log_jsonl=args.log_jsonl,
+                          log_stream_every=args.log_every,
+                          profile_dir=args.profile)
+        return
     if args.mode == "feature":
         feature_train_loop(clients=args.clients, rounds=args.steps,
                            batch=args.batch, features=args.features,
