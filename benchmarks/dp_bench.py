@@ -1,0 +1,125 @@
+"""DP frontier benchmark (DESIGN.md §15): ε vs final loss for the dp=
+clip+noise upload stage composed with the int8+EF codec path, at equal
+rounds, via the same Algorithm-1 driver as the non-private runs.
+
+Claims checked:
+
+* bytes-on-wire are UNCHANGED by DP — the clip+noise stage runs before
+  codec encode, so every round's ``upload_bytes`` under dp= equals the
+  non-DP int8 run exactly (asserted per-round, not just the total);
+* the streamed ε matches the subsampled-RDP accountant's end-of-run
+  ``epsilon_total`` recorded in the manifest block;
+* (full mode only) the frontier is monotone: smaller ε (more noise) never
+  *improves* final training cost.
+
+Emits BENCH_dp.json: one row per ε ∈ {∞, 8, 2, 0.5} with final cost, test
+accuracy, realized ε, noise multiplier, and per-round upload bytes.
+
+Usage:  PYTHONPATH=src python -m benchmarks.dp_bench [--smoke]
+            [--rounds 200] [--json BENCH_dp.json]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.comm import make_codec
+from repro.configs.base import FLConfig
+from repro.core import algorithms, fed, privacy
+from repro.data.synthetic import classification_dataset
+from repro.models import mlp
+
+EPS_SWEEP = (None, 8.0, 2.0, 0.5)       # None = non-private baseline
+CLIP = 5.0
+DELTA = 1e-5
+
+
+def _problem():
+    key = jax.random.PRNGKey(0)
+    (z, y, _), (zt, _, labt) = classification_dataset(
+        key, n=10_000, num_features=128, num_classes=10, test_n=1000,
+        noise=4.0)
+    params0 = mlp.init(jax.random.PRNGKey(1), 128, 32, 10)
+    data = fed.partition_samples(z, y, 10)
+    return z, y, zt, labt, params0, data
+
+
+def dp_privacy_frontier(rounds: int = 200, json_path: str | None = None):
+    z, y, zt, labt, params0, data = _problem()
+    fl = FLConfig(batch_size=32, a1=0.9, a2=0.5, alpha_rho=0.1,
+                  alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
+    psl = mlp.per_sample_loss
+
+    results = []
+    for eps in EPS_SWEEP:
+        dp = (None if eps is None else
+              privacy.DPConfig(clip_norm=CLIP, epsilon=eps, delta=DELTA))
+        r = algorithms.algorithm1(psl, params0, data, fl, rounds,
+                                  jax.random.PRNGKey(3),
+                                  codec=make_codec("int8"), dp=dp)
+        cost = float(mlp.mean_loss(r.params, z[:4000], y[:4000]))
+        acc = float(mlp.accuracy(r.params, zt, labt))
+        row = {"epsilon": eps, "cost": cost, "acc": acc,
+               "upload_bytes": np.asarray(
+                   r.history["round_upload_bytes"], np.float64),
+               "noise_multiplier": (None if dp is None
+                                    else privacy.noise_multiplier(dp))}
+        if dp is not None:
+            eps_stream = float(
+                np.asarray(r.history["round_dp_epsilon"])[-1])
+            eps_manifest = privacy.manifest_info(
+                dp, 1.0, rounds=rounds)["epsilon_total"]
+            # streamed in-graph ε (float32 constants) vs the host-side
+            # accountant — must be the same number
+            assert abs(eps_stream - eps_manifest) <= 1e-4 * eps_manifest, (
+                eps_stream, eps_manifest)
+            row["epsilon_realized"] = eps_stream
+        results.append(row)
+        tag = "inf" if eps is None else eps
+        print(f"dp.frontier.eps{tag},0,cost={cost:.4f};acc={acc:.4f};"
+              f"bytes={row['upload_bytes'].sum():.0f}", flush=True)
+
+    # bytes-on-wire invariance: DP runs before the codec, so every DP run's
+    # per-round wire bytes equal the non-DP int8 run's exactly
+    base_bytes = results[0]["upload_bytes"]
+    for row in results[1:]:
+        np.testing.assert_array_equal(row["upload_bytes"], base_bytes), \
+            row["epsilon"]
+    print(f"dp.frontier.bytes_invariant,0,per_round={base_bytes[0]:.0f}",
+        flush=True)
+
+    # frontier monotonicity only at full horizon — a smoke run's handful of
+    # rounds is inside the noise floor
+    if rounds >= 100:
+        costs = {row["epsilon"]: row["cost"] for row in results}
+        assert costs[0.5] >= costs[8.0] - 0.05, costs
+        assert costs[8.0] >= costs[None] - 0.05, costs
+
+    if json_path:
+        from repro.obs import sinks as obs_sinks
+        payload = [{k: (v.sum() if k == "upload_bytes" else v)
+                    for k, v in row.items()} for row in results]
+        obs_sinks.bench_json(
+            json_path,
+            {"rounds": rounds, "clip_norm": CLIP, "delta": DELTA,
+             "frontier": payload},
+            config=fl, codec=make_codec("int8"),
+            extra={"dp_sweep": [e for e in EPS_SWEEP if e is not None]})
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true",
+                    help="few rounds, skip the frontier-shape assertion")
+    ap.add_argument("--json", default=None, help="write BENCH_dp.json here")
+    args = ap.parse_args()
+    dp_privacy_frontier(rounds=30 if args.smoke else args.rounds,
+                        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

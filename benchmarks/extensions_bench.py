@@ -14,9 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core import algorithms, fed, optimizer
+from repro.core import algorithms, fed
 from repro.core.local_updates import algorithm1_local
-from repro.core.privacy import DPConfig, dp_sample_round
+from repro.core.privacy import DPConfig
 from repro.data.synthetic import classification_dataset
 from repro.models import mlp
 
@@ -65,20 +65,13 @@ def ext2_dp_uploads():
                   alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
 
     def run_dp(eps, rounds=200):
+        # the first-class dp= stage (DESIGN.md §15): same scan driver as the
+        # non-private run, clip+noise inside the round, accountant streamed
         dp = DPConfig(clip_norm=5.0, epsilon=eps, delta=1e-5)
-        state = optimizer.ssca_init(params0)
-        key = jax.random.PRNGKey(3)
-
-        @jax.jit
-        def step(state, k):
-            g, _ = dp_sample_round(psl, state.params, data, k, fl.batch_size, dp)
-            return optimizer.ssca_step(state, g, fl)
-
-        for _ in range(rounds):
-            key, sub = jax.random.split(key)
-            state = step(state, sub)
-        return (float(mlp.mean_loss(state.params, z[:4000], y[:4000])),
-                float(mlp.accuracy(state.params, zt, labt)))
+        r = algorithms.algorithm1(psl, params0, data, fl, rounds,
+                                  jax.random.PRNGKey(3), dp=dp)
+        return (float(mlp.mean_loss(r.params, z[:4000], y[:4000])),
+                float(mlp.accuracy(r.params, zt, labt)))
 
     base = None
     for eps in (float("inf"), 16.0, 4.0, 1.0):

@@ -14,8 +14,9 @@ def main() -> None:
                     help="substring filter on benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (extensions_bench, figures, kernels_bench,
-                            obs_bench, rounds_bench, scale_bench)
+    from benchmarks import (dp_bench, extensions_bench, figures,
+                            kernels_bench, obs_bench, rounds_bench,
+                            scale_bench)
     benches = [
         ("rounds_scan_vs_loop", rounds_bench.rounds_scan_vs_loop),
         ("scale_cohort_engine", scale_bench.scale_smoke),
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig4_sparsity_cost_tradeoff", figures.fig4_sparsity_cost_tradeoff),
         ("ext1_local_updates", extensions_bench.ext1_local_updates),
         ("ext2_dp_uploads", extensions_bench.ext2_dp_uploads),
+        ("dp_privacy_frontier", dp_bench.dp_privacy_frontier),
         ("kernel_microbench", kernels_bench.kernel_microbench),
         ("roofline_table", kernels_bench.roofline_table),
     ]

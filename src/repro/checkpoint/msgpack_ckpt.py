@@ -22,9 +22,11 @@ def _pack(leaf):
 
 
 def _unpack(obj):
+    # kept as NUMPY: load_checkpoint compares stored dtypes before any
+    # jnp conversion (which would silently downcast f64 with x64 disabled)
     if isinstance(obj, dict) and obj.get("__nd__"):
-        arr = np.frombuffer(obj["data"], dtype=obj["dtype"]).reshape(obj["shape"])
-        return jnp.asarray(arr)
+        return np.frombuffer(obj["data"],
+                             dtype=obj["dtype"]).reshape(obj["shape"])
     return obj
 
 
@@ -39,9 +41,14 @@ def save_checkpoint(path: str, tree, step: int = 0):
     os.replace(tmp, path)
 
 
-def load_checkpoint(path: str, like):
+def load_checkpoint(path: str, like, cast: bool = False):
     """`like`: a pytree with the same structure (e.g. fresh init) — leaves are
-    replaced by the stored arrays in flatten order; treedef str is verified."""
+    replaced by the stored arrays in flatten order; treedef str is verified.
+
+    Stored dtypes must match `like` exactly unless ``cast=True``: the old
+    silent ``astype`` let a float64 checkpoint load into float32 with no
+    warning (and under JAX's default x64-disabled mode the downcast happened
+    before any check could see it — the comparison here is numpy-side)."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     leaves, treedef = jax.tree.flatten(like)
@@ -50,5 +57,16 @@ def load_checkpoint(path: str, like):
         raise ValueError(f"checkpoint has {len(stored)} leaves, expected {len(leaves)}")
     if payload["treedef"] != str(treedef):
         raise ValueError("checkpoint treedef mismatch")
-    restored = [s.astype(l.dtype).reshape(l.shape) for s, l in zip(stored, leaves)]
+    if not cast:
+        bad = [f"leaf {i}: stored {np.asarray(s).dtype} != expected "
+               f"{np.asarray(l).dtype}"
+               for i, (s, l) in enumerate(zip(stored, leaves))
+               if np.asarray(s).dtype != np.asarray(l).dtype]
+        if bad:
+            raise ValueError(
+                "checkpoint dtype mismatch (pass cast=True to convert "
+                "explicitly): " + "; ".join(bad))
+    restored = [jnp.asarray(np.asarray(s).astype(np.asarray(l).dtype)
+                            .reshape(np.asarray(l).shape))
+                for s, l in zip(stored, leaves)]
     return jax.tree.unflatten(treedef, restored), payload["step"]

@@ -31,6 +31,13 @@ Two layouts exist for the per-client residual matrix:
   and scatters the updated slice back, O(S·P) touched per round. A
   non-participant's row is never read or written, so the two layouts stay
   bit-equal (pinned in tests/test_cohort.py).
+
+Ordering with DP (DESIGN.md §15): the ``dp=`` clip+noise stage of
+core/topology.py runs BEFORE ``ef_roundtrip``, so ``target`` — and hence
+the residual the client carries between rounds — is built from the
+already-privatized upload. The residual never stores raw (pre-noise)
+signal: EF state leaking cannot undo the mechanism, and what EF re-injects
+next round is codec error on privatized data, not deferred private signal.
 """
 from __future__ import annotations
 

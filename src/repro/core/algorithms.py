@@ -32,6 +32,16 @@ to float reassociation, one scan dispatch spanning D devices. Under a
 sharded topology the metrics additionally carry ``axis_bytes``, the
 per-round bytes the aggregation psum moves over the client mesh axis
 (repro.comm.accounting.psum_axis_bytes).
+
+Every driver also takes ``dp=`` (repro.core.privacy.DPConfig, DESIGN.md
+§15): client q-uploads are then clipped and Gaussian-noised at the client
+boundary BEFORE any codec encode, and each round's metrics gain
+``dp_epsilon`` (the subsampled-RDP accountant's ε spent through round t —
+cross-round composition, in-graph via RoundInputs.t), ``dp_clip_frac``
+(fraction of participating clients whose upload hit the clip norm), and
+``dp_noise_norm`` (ℓ2 norm of the injected noise). Partial participation
+(``participation=S`` / the cohort engine) is accounted with the q = S/I
+subsampling amplification.
 """
 from __future__ import annotations
 
@@ -45,6 +55,7 @@ from repro.comm import codecs as comm_codecs
 from repro.comm.error_feedback import (CommCarry, ef_init, ef_init_stacked,
                                        ef_store_init, with_comm_carry)
 from repro.core import fed, optimizer
+from repro.core import privacy as privacy_lib
 from repro.core import rounds as rounds_lib
 from repro.core.fed import FeatureFedData, SampleFedData
 from repro.core.rounds import RunResult  # re-exported (public API since seed)
@@ -150,6 +161,42 @@ def _ef_norm(ef):
                         for x in jax.tree.leaves(ef)))
 
 
+def _dp_sample_rate(participation, num_clients: int) -> float:
+    """Accountant subsampling rate q for a sample-based driver: S/I under
+    partial participation (dense mask or cohort engine — both draw S of I
+    uniformly without replacement, accounted with the standard Poisson-
+    subsampling RDP bound, conservative here), 1.0 at full participation."""
+    if participation is None or participation >= num_clients:
+        return 1.0
+    return participation / num_clients
+
+
+def _dp_metrics(eps_fn, stats, mask, inp):
+    """Per-round DP metrics from the uploads["dp"] stats of a sample-based
+    round. `mask` is the dense participation mask (None on the cohort path
+    and at full participation: every row of `stats` then belongs to a real
+    participant). dp_epsilon is ε spent through round t — the accountant's
+    cross-round composition evaluated in-graph at inp.t."""
+    clipped, noise_sq = stats["clipped"], stats["noise_sq"]
+    if mask is None:
+        mask = jnp.ones_like(clipped)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return {"dp_epsilon": eps_fn(inp.t),
+            "dp_clip_frac": jnp.sum(clipped * mask) / denom,
+            "dp_noise_norm": jnp.sqrt(jnp.sum(noise_sq * mask))}
+
+
+def _dp_feature_metrics(eps_fn, stats, num_clients: int, inp):
+    """Feature-round variant: one head stream + I block streams, all
+    released every round (the clip fraction averages over the I+1 uploads)."""
+    return {"dp_epsilon": eps_fn(inp.t),
+            "dp_clip_frac": (stats["head_clipped"]
+                             + jnp.sum(stats["blocks_clipped"]))
+            / (num_clients + 1.0),
+            "dp_noise_norm": jnp.sqrt(stats["head_noise_sq"]
+                                      + jnp.sum(stats["blocks_noise_sq"]))}
+
+
 class _NullSched:
     a1 = a2 = 1.0
     alpha_rho = alpha_gamma = 1.0
@@ -165,7 +212,7 @@ _NULL_SCHED = _NullSched()
 
 def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
                          participation: Optional[int] = None, codec=None,
-                         topology=None, cohort: bool = False):
+                         topology=None, cohort: bool = False, dp=None):
     """One full Algorithm-1 round as a pure (state, RoundInputs) step —
     batch selection, uploads (optionally codec-compressed with error
     feedback), aggregation, surrogate recursion, update — suitable for
@@ -173,19 +220,23 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
     state is a CommCarry(opt=SSCAState, ef=(I, P) residuals). topology
     selects the client-execution engine (DESIGN.md §11). cohort=True runs
     the participant-only O(S) engine (fed.cohort_round, DESIGN.md §14):
-    ef becomes a keyed EFStore and topology shards the cohort axis."""
+    ef becomes a keyed EFStore and topology shards the cohort axis. dp=
+    privatizes every q-upload (DESIGN.md §15) and adds the dp_* metrics."""
     _check_cohort("make_algorithm1_step", cohort, participation)
+    eps_fn = (privacy_lib.make_eps_fn(
+        dp, _dp_sample_rate(participation, data.num_clients))
+        if dp is not None else None)
 
     def body(state, inp, ef):
         if cohort:
             grad_est, val_est, up = fed.cohort_round(
                 per_sample_loss, state.params, data, inp.key, fl.batch_size,
-                participation, codec=codec, ef=ef, topology=topology)
+                participation, codec=codec, ef=ef, topology=topology, dp=dp)
         else:
             grad_est, val_est, up = fed.sample_round(
                 per_sample_loss, state.params, data, inp.key, fl.batch_size,
                 participation=participation, codec=codec, ef=ef,
-                topology=topology)
+                topology=topology, dp=dp)
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est,
@@ -196,6 +247,9 @@ def make_algorithm1_step(per_sample_loss, data: SampleFedData, fl,
         if codec is not None:
             metrics["ef_norm"] = (_cohort_ef_norm(up) if cohort
                                   else _ef_norm(up["ef"]))
+        if dp is not None:
+            metrics.update(_dp_metrics(eps_fn, up["dp"],
+                                       up.get("participants"), inp))
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -205,9 +259,9 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
                driver: str = "scan", codec=None, topology=None,
-               obs=None, cohort: bool = False) -> RunResult:
+               obs=None, cohort: bool = False, dp=None) -> RunResult:
     step = make_algorithm1_step(per_sample_loss, data, fl, participation,
-                                codec, topology, cohort)
+                                codec, topology, cohort, dp)
     state = _wrap_codec_state(
         optimizer.ssca_init(params0), codec,
         lambda: _sample_ef0(params0, data.num_clients, cohort))
@@ -222,20 +276,26 @@ def algorithm1(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
 
 def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
                          participation: Optional[int] = None, codec=None,
-                         topology=None, cohort: bool = False):
+                         topology=None, cohort: bool = False, dp=None):
     _check_cohort("make_algorithm2_step", cohort, participation)
+    # NOTE: dp= privatizes the q-grad uploads; the scalar q-value (loss) sums
+    # that with_value=True also releases are NOT noised — the accountant
+    # covers the gradient stream only (documented limitation, DESIGN.md §15).
+    eps_fn = (privacy_lib.make_eps_fn(
+        dp, _dp_sample_rate(participation, data.num_clients))
+        if dp is not None else None)
 
     def body(state, inp, ef):
         if cohort:
             grad_est, val_est, up = fed.cohort_round(
                 per_sample_loss, state.params, data, inp.key, fl.batch_size,
                 participation, with_value=True, codec=codec, ef=ef,
-                topology=topology)
+                topology=topology, dp=dp)
         else:
             grad_est, val_est, up = fed.sample_round(
                 per_sample_loss, state.params, data, inp.key, fl.batch_size,
                 with_value=True, participation=participation, codec=codec,
-                ef=ef, topology=topology)
+                ef=ef, topology=topology, dp=dp)
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
         metrics = {"loss_est": val_est, "nu": new.nu, "slack": new.slack,
@@ -248,6 +308,9 @@ def make_algorithm2_step(per_sample_loss, data: SampleFedData, fl,
         if codec is not None:
             metrics["ef_norm"] = (_cohort_ef_norm(up) if cohort
                                   else _ef_norm(up["ef"]))
+        if dp is not None:
+            metrics.update(_dp_metrics(eps_fn, up["dp"],
+                                       up.get("participants"), inp))
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -257,9 +320,9 @@ def algorithm2(per_sample_loss, params0, data: SampleFedData, fl, rounds: int,
                key, eval_fn=None, eval_every: int = 10,
                participation: Optional[int] = None,
                driver: str = "scan", codec=None, topology=None,
-               obs=None, cohort: bool = False) -> RunResult:
+               obs=None, cohort: bool = False, dp=None) -> RunResult:
     step = make_algorithm2_step(per_sample_loss, data, fl, participation,
-                                codec, topology, cohort)
+                                codec, topology, cohort, dp)
     state = _wrap_codec_state(
         optimizer.ssca_constrained_init(params0), codec,
         lambda: _sample_ef0(params0, data.num_clients, cohort))
@@ -272,15 +335,20 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
                        participation: Optional[int] = None,
                        driver: str = "scan", codec=None,
                        topology=None, obs=None,
-                       cohort: bool = False) -> RunResult:
+                       cohort: bool = False, dp=None) -> RunResult:
     """Full Algorithm 2: sampled nonconvex objective AND constraint. With a
     codec the objective and constraint q-uploads carry separate EF
     residuals (ef = {"obj": (I, P), "cons": (I, P)}); under a sharded
     topology both aggregations psum over the client axes (two streams).
     cohort=True runs both streams through the O(S) engine — the shared
     participation key makes each stream re-derive the SAME cohort ids, and
-    each stream's residuals live in their own keyed EFStore."""
+    each stream's residuals live in their own keyed EFStore. dp= privatizes
+    BOTH q-grad streams (independent noise keys per stream), so the
+    accountant composes 2 releases per round."""
     _check_cohort("algorithm2_general", cohort, participation)
+    eps_fn = (privacy_lib.make_eps_fn(
+        dp, _dp_sample_rate(participation, data.num_clients),
+        releases_per_round=2) if dp is not None else None)
 
     def body(state, inp, ef):
         ef = ef if ef is not None else {"obj": None, "cons": None}
@@ -292,23 +360,27 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
             og, _, uo = fed.cohort_round(obj_loss, state.params, data, k1,
                                          fl.batch_size, participation,
                                          participation_key=pk, codec=codec,
-                                         ef=ef["obj"], topology=topology)
+                                         ef=ef["obj"], topology=topology,
+                                         dp=dp)
             cg, cv, uc = fed.cohort_round(cons_loss, state.params, data, k2,
                                           fl.batch_size, participation,
                                           with_value=True,
                                           participation_key=pk, codec=codec,
-                                          ef=ef["cons"], topology=topology)
+                                          ef=ef["cons"], topology=topology,
+                                          dp=dp)
         else:
             og, _, uo = fed.sample_round(obj_loss, state.params, data, k1,
                                          fl.batch_size,
                                          participation=participation,
                                          participation_key=pk, codec=codec,
-                                         ef=ef["obj"], topology=topology)
+                                         ef=ef["obj"], topology=topology,
+                                         dp=dp)
             cg, cv, uc = fed.sample_round(cons_loss, state.params, data, k2,
                                           fl.batch_size, with_value=True,
                                           participation=participation,
                                           participation_key=pk, codec=codec,
-                                          ef=ef["cons"], topology=topology)
+                                          ef=ef["cons"], topology=topology,
+                                          dp=dp)
         new = optimizer.ssca_general_constrained_step(
             state, og, cg, cv, fl, rho_t=inp.rho, gamma_t=inp.gamma)
         bts = (_sample_upload_bytes(uo, og, data, participation)
@@ -326,6 +398,16 @@ def algorithm2_general(obj_loss, cons_loss, params0, data: SampleFedData, fl,
             metrics["ef_norm"] = (
                 _cohort_ef_norm({"cohort": uo["cohort"], "ef": new_ef})
                 if cohort else _ef_norm(new_ef))
+        if dp is not None:
+            pm = uo.get("participants")
+            mo = _dp_metrics(eps_fn, uo["dp"], pm, inp)
+            mc = _dp_metrics(eps_fn, uc["dp"], pm, inp)
+            metrics.update({
+                "dp_epsilon": mo["dp_epsilon"],
+                "dp_clip_frac": 0.5 * (mo["dp_clip_frac"]
+                                       + mc["dp_clip_frac"]),
+                "dp_noise_norm": jnp.sqrt(jnp.square(mo["dp_noise_norm"])
+                                          + jnp.square(mc["dp_noise_norm"]))})
         return new, new_ef, metrics
 
     step = with_comm_carry(codec, body)
@@ -390,14 +472,20 @@ def _feature_ef0(params0, num_clients: int):
 
 
 def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                       update_fn, topology=None):
+                       update_fn, topology=None, dp=None):
     """Shared Algorithm-3/4 step body: feature_round + the given optimizer
     update, with optional codec/EF threading. topology selects the feature
-    client-execution engine (DESIGN.md §12)."""
+    client-execution engine (DESIGN.md §12). dp= privatizes the head and
+    block q-uploads — all I clients release every round (q = 1) and the
+    head + block streams count as 2 releases per round for the accountant;
+    the step-4 h-exchange stays unprivatized (fed.feature_round docstring)."""
+    eps_fn = (privacy_lib.make_eps_fn(dp, 1.0, releases_per_round=2)
+              if dp is not None else None)
+
     def body(state, inp, ef):
         grad_est, val_est, up = fed.feature_round(
             state.params, data, inp.key, fl.batch_size, head_loss_from_h,
-            client_h, codec=codec, ef=ef, topology=topology)
+            client_h, codec=codec, ef=ef, topology=topology, dp=dp)
         new, metrics = update_fn(state, grad_est, val_est, inp)
         metrics["stat_res"] = _stat_res(new.params, state.params, inp.gamma)
         metrics["upload_bytes"] = _feature_upload_bytes(up, grad_est, data,
@@ -405,6 +493,9 @@ def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
         metrics["axis_bytes"] = _feature_axis_bytes(topology, up)
         if codec is not None:
             metrics["ef_norm"] = _ef_norm(up["ef"])
+        if dp is not None:
+            metrics.update(_dp_feature_metrics(eps_fn, up["dp"],
+                                               data.num_clients, inp))
         return new, up["ef"], metrics
 
     return with_comm_carry(codec, body)
@@ -413,14 +504,14 @@ def _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
 def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
                driver: str = "scan", codec=None, topology=None,
-               obs=None) -> RunResult:
+               obs=None, dp=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_step(state, grad_est, fl,
                                   rho_t=inp.rho, gamma_t=inp.gamma)
         return new, {"loss_est": val_est}
 
     step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                              update, topology)
+                              update, topology, dp)
     state = _wrap_codec_state(optimizer.ssca_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(step, state, key, rounds, eval_fn, eval_every,
@@ -435,7 +526,7 @@ def algorithm3(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
 def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                rounds: int, key, eval_fn=None, eval_every: int = 10,
                driver: str = "scan", codec=None, topology=None,
-               obs=None) -> RunResult:
+               obs=None, dp=None) -> RunResult:
     def update(state, grad_est, val_est, inp):
         new = optimizer.ssca_constrained_step(state, grad_est, val_est, fl,
                                               rho_t=inp.rho, gamma_t=inp.gamma)
@@ -443,7 +534,7 @@ def algorithm4(head_loss_from_h, client_h, params0, data: FeatureFedData, fl,
                      "cons_viol": jnp.maximum(val_est - fl.cost_limit, 0.0)}
 
     step = _make_feature_step(head_loss_from_h, client_h, data, fl, codec,
-                              update, topology)
+                              update, topology, dp)
     state = _wrap_codec_state(optimizer.ssca_constrained_init(params0), codec,
                               lambda: _feature_ef0(params0, data.num_clients))
     return _run_feature(step, state, key, rounds, eval_fn, eval_every,

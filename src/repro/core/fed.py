@@ -348,7 +348,8 @@ def aggregation_weights(counts, batch_size: int, part_mask=None):
 def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
                  batch_size: int, with_value: bool = False,
                  participation: int | None = None, participation_key=None,
-                 codec=None, ef=None, codec_key=None, topology=None):
+                 codec=None, ef=None, codec_key=None, topology=None,
+                 dp=None, dp_key=None):
     """Computes client uploads q_i = Σ_{n∈batch} ∇f(ω;x_n) (and Σ f if asked)
     then the server aggregate ĝ = Σ_i N_i/(B_i·N) q_i  (and F̂ likewise).
 
@@ -372,6 +373,16 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
     *before* the collective. Batch selection, participation draw, and codec
     keys are computed identically for every topology, so trajectories agree
     up to float reassociation.
+
+    With ``dp=`` (a repro.core.privacy.DPConfig) each client's flat
+    q-upload is clipped to ``dp.clip_norm`` at B_i-mean scale and Gaussian-
+    noised at the analytic σ BEFORE any codec encode (DESIGN.md §15) — the
+    wire format, bytes accounting, and EF residual see the privatized
+    upload, and under a sharded topology the noise is added per shard
+    before the psum. Noise keys derive from the STABLE client id
+    (`client_keys`), so the dense and cohort engines draw identical noise
+    for the same client; ``dp_key`` overrides the derivation base.
+    Per-client clip/noise statistics come back as ``uploads["dp"]``.
 
     Returns (grad_est, value_est, uploads) — `uploads` is everything that
     crossed the client boundary (privacy-surface assertion hook); with a
@@ -416,13 +427,24 @@ def sample_round(per_sample_loss: Callable, params, data: SampleFedData, key,
         nbytes = comm_accounting.sample_round_bytes(
             comm_codecs.tree_flat_dim(params), data.num_clients, codec,
             participation=participation, with_value=with_value)["up"]
+    dkeys = dscale = None
+    if dp is not None:
+        if dp_key is None:
+            dp_key = jax.random.fold_in(key, 0xD9)
+        dkeys = client_keys(dp_key, jnp.arange(data.num_clients))
+        # clip at the client's B_i-MEAN scale (C is a per-example-scale
+        # constant); the stage rescales to the B_i-sum afterwards so the
+        # eq.-(9) weights are untouched
+        dscale = 1.0 / jnp.minimum(data.counts.astype(jnp.float32),
+                                   float(batch_size))
     w = aggregation_weights(data.counts, batch_size, pmask)
     s = topo.weighted_sum(client, (data.features, data.labels, idx, bmask), w,
-                          codec=codec, ef=ef, codec_keys=ckeys, active=active)
+                          codec=codec, ef=ef, codec_keys=ckeys, active=active,
+                          dp=dp, dp_keys=dkeys, dp_scale=dscale)
     uploads = {"q_grad_sums": s.uploads,
                "q_value_sums": s.values if with_value else None,
                "participants": pmask, "encoded": s.encoded, "ef": s.ef,
-               "upload_nbytes": nbytes}
+               "dp": s.dp, "upload_nbytes": nbytes}
     return s.weighted, s.value, uploads
 
 
@@ -440,7 +462,7 @@ def cohort_weights(counts_s, batch_size: int, num_clients: int, total):
 def cohort_round(per_sample_loss: Callable, params, data, key,
                  batch_size: int, cohort: int, with_value: bool = False,
                  participation_key=None, codec=None, ef=None, codec_key=None,
-                 topology=None):
+                 topology=None, dp=None, dp_key=None):
     """Participant-only O(S) realization of :func:`sample_round` under
     partial participation (DESIGN.md §14).
 
@@ -471,6 +493,14 @@ def cohort_round(per_sample_loss: Callable, params, data, key,
     ``topology=`` shards the COHORT axis: a `ShardedTopology` splits the S
     participants over the mesh (S must divide by the shard count), so
     population size never constrains the mesh fit.
+
+    ``dp=`` privatizes the cohort's uploads exactly as in
+    :func:`sample_round` — O(S) clip+noise work with noise keys derived
+    from the STABLE client id, so the dense engine's noise for the same
+    drawn client is identical and the two trajectories keep agreeing at
+    atol 1e-5. The S-of-I draw is also what earns the accountant's
+    subsampling amplification (privacy.rdp_per_round at q = S/I).
+    Per-client stats come back as ``uploads["dp"]`` ((S,)-shaped).
 
     Returns (grad_est, value_est, uploads); ``uploads["cohort"]`` is the
     (S,) drawn client ids — the O(S) analog of the dense path's
@@ -519,15 +549,23 @@ def cohort_round(per_sample_loss: Callable, params, data, key,
         nbytes = comm_accounting.sample_round_bytes(
             dim, num_clients, codec, participation=cohort,
             with_value=with_value)["up"]
+    dkeys = dscale = None
+    if dp is not None:
+        if dp_key is None:
+            dp_key = jax.random.fold_in(key, 0xD9)
+        dkeys = client_keys(dp_key, ids)      # stable ids == dense engine
+        dscale = 1.0 / jnp.minimum(counts_s.astype(jnp.float32),
+                                   float(batch_size))
     w = cohort_weights(counts_s, batch_size, num_clients, data.total)
     s = topo.weighted_sum(client, (zb, yb, bmask), w, codec=codec,
-                          ef=ef_rows, codec_keys=ckeys, active=active)
+                          ef=ef_rows, codec_keys=ckeys, active=active,
+                          dp=dp, dp_keys=dkeys, dp_scale=dscale)
     new_ef = ef.scatter(ids, s.ef) if (codec is not None
                                        and ef is not None) else s.ef
     uploads = {"q_grad_sums": s.uploads,
                "q_value_sums": s.values if with_value else None,
                "cohort": ids, "encoded": s.encoded, "ef": new_ef,
-               "upload_nbytes": nbytes}
+               "dp": s.dp, "upload_nbytes": nbytes}
     return s.weighted, s.value, uploads
 
 
@@ -538,7 +576,8 @@ def cohort_round(per_sample_loss: Callable, params, data, key,
 
 def feature_round(params, data: FeatureFedData, key, batch_size: int,
                   head_loss_from_h: Callable, client_h: Callable,
-                  codec=None, ef=None, codec_key=None, topology=None):
+                  codec=None, ef=None, codec_key=None, topology=None,
+                  dp=None, dp_key=None):
     """Faithful Alg-3 information flow for f(ω;x) = g0(ω0, Σ_i h_i(ω_i, x_i)):
 
       server picks N^(t)  →  client i computes h_i and broadcasts it  →
@@ -561,6 +600,14 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
     h_sum, hence bit-identical gradients and wire formats across topologies.
     Batch selection and codec keys are computed identically for every
     topology.
+
+    With ``dp=`` the two q-upload streams — the head q_{f,0,0} and each
+    client's block q_{f,0,i} — are clipped at B-mean scale and Gaussian-
+    noised BEFORE any codec encode, exactly as in :func:`sample_round`
+    (DESIGN.md §15). The step-4 h-exchange is NOT privatized here: it is a
+    per-round activation broadcast, not an aggregate release, and a
+    deployment would need a separate mechanism for it (documented
+    limitation). Per-stream stats come back as ``uploads["dp"]``.
 
     Returns (grad_est pytree like params, value_est, uploads).
     """
@@ -608,10 +655,19 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
         head_key = jax.random.fold_in(codec_key, 0)
         block_keys = jax.random.split(jax.random.fold_in(codec_key, 1),
                                       data.num_clients)
+    dp_head_key = dp_block_keys = None
+    if dp is not None:
+        if dp_key is None:
+            dp_key = jax.random.fold_in(key, 0xD9)
+        dp_head_key = jax.random.fold_in(dp_key, 0)
+        dp_block_keys = client_keys(jax.random.fold_in(dp_key, 1),
+                                    jnp.arange(data.num_clients))
 
     s = topo.feature_sum(client_h, head_fn, block_grad, params["blocks"], zb,
                          codec=codec, ef=ef, head_key=head_key,
-                         block_keys=block_keys)
+                         block_keys=block_keys, dp=dp,
+                         dp_head_key=dp_head_key, dp_block_keys=dp_block_keys,
+                         dp_scale=1.0 / batch_size)
     if codec is not None:
         nbytes = comm_accounting.feature_round_bytes(
             d_head, [d_block] * data.num_clients, batch_size,
@@ -621,7 +677,8 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
                 "blocks": s.q_blocks / batch_size}
     value_est = s.value / batch_size
     uploads = {"h_exchange": s.h, "q_head": s.q_head, "q_blocks": s.q_blocks,
-               "encoded": s.encoded, "ef": s.ef, "upload_nbytes": nbytes}
+               "encoded": s.encoded, "ef": s.ef, "dp": s.dp,
+               "upload_nbytes": nbytes}
     return grad_est, value_est, uploads
 
 

@@ -1,48 +1,312 @@
-"""Optional privacy mechanisms layered on the paper's model aggregation.
+"""Differential privacy on the q-uploads: calibration, the clip→noise
+stage, and cross-round RDP accounting (DESIGN.md §15).
 
 The paper (§III-A.2 etc.) notes that when the q-statistics system of
 equations is solvable, *extra* mechanisms are needed: homomorphic encryption
 (out of scope — no crypto here), secret sharing, or differential privacy.
-We implement the Gaussian mechanism on client uploads:
+We implement the Gaussian mechanism at the client boundary: each client's
+per-round release is its B_i-mean q-statistic, clipped to ℓ2 norm C and
+noised,
 
-  q̃_i = clip(q_i, C) + N(0, σ²C²I)
+  m̃_i = clip(q_i / B_i, C) + N(0, σ²C²·I_P),
 
-which, per round, gives (ε, δ)-DP for the standard calibration
-σ = sqrt(2 ln(1.25/δ)) / ε against the B-sum sensitivity C (per-client
-add/remove adjacency; composition across rounds via the usual accountants —
-we report the per-round ε only). The SSCA aggregate stays *unbiased*
-(the noise is zero-mean), so Theorem 1's convergence argument applies to the
-noised estimates with inflated variance; tests check convergence survives
-moderate σ and that the noised upload no longer reveals the exact q.
+re-scaled to the B_i-sum so the eq.-(9) aggregation weights are untouched.
+The stage runs INSIDE ``Topology.weighted_sum`` — after client compute,
+BEFORE codec encode — so the wire format, the bytes-on-wire accounting, and
+the error-feedback residual all see the already-privatized upload (what a
+deployment's server would see; the EF residual never stores raw signal).
+The sharded engine adds the noise per shard, so the psum aggregates
+already-noised contributions. Drive it with ``dp=DPConfig(...)`` on
+``fed.sample_round`` / ``fed.cohort_round`` / ``fed.feature_round`` and on
+every ``core.algorithms`` driver.
+
+Calibration is the ANALYTIC Gaussian mechanism (Balle & Wang 2018): the
+smallest σ satisfying the exact Gaussian-CDF (ε, δ) condition, found by
+binary search. The classical σ = sqrt(2 ln(1.25/δ))/ε closed form is only a
+valid (ε, δ)-DP calibration for ε < 1 — this module's historical default
+ε = 8 sat outside its regime — and is strictly looser than the analytic σ
+everywhere (kept as :func:`classical_noise_multiplier` for the comparison
+tests).
+
+Cross-round accounting composes in Rényi DP (Abadi et al. 2016 moments
+accountant; Mironov 2017): one subsampled-Gaussian release at rate
+q = S/I has a closed-form RDP(α) bound per order α, RDP composes LINEARLY
+over the K scanned rounds, and ε(δ) = min_α [K·RDP(α) + log(1/δ)/(α−1)].
+The linearity is what makes ε-so-far streamable from inside a ``lax.scan``:
+:func:`make_eps_fn` bakes the per-round RDP vector into the step closure as
+a constant and the round's global 1-based index ``RoundInputs.t`` does the
+rest — no table indexed by the horizon.
+
+Accounting caveats (documented, conservative direction where they bend):
+the adjacency is client-level (add/remove one client's whole shard — each
+client's release is what crosses the trust boundary); per-client noise
+makes the central aggregate carry S independent noise draws where the
+accountant only assumes one, so the reported ε is conservative by ~√S for
+the aggregate observer; and the cohort engine's uniform-WITHOUT-replacement
+draw is accounted with the Poisson-subsampling RDP bound (the standard
+practice — the two samplings agree at S ≪ I). The scalar loss stream of
+``with_value=True`` rounds is NOT privatized (gradient statistics only).
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class DPConfig(NamedTuple):
-    clip_norm: float = 1.0       # C: l2 clip of each client's q upload
-    epsilon: float = 8.0         # per-round ε
-    delta: float = 1e-5
+    """Clip+noise configuration for the client-boundary DP stage.
+
+    ``noise_multiplier`` overrides the analytic (ε, δ) calibration with an
+    explicit σ/C (e.g. to sweep noise directly in benchmarks); when None,
+    σ/C is calibrated from (epsilon, delta) per release by
+    :func:`analytic_gaussian_sigma`."""
+    clip_norm: float = 1.0       # C: ℓ2 clip of each client's mean q upload
+    epsilon: float = 8.0         # per-release ε target (see accountant fns
+    delta: float = 1e-5          #   for the composed cross-round ε)
+    noise_multiplier: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# Gaussian-mechanism calibration
+# ---------------------------------------------------------------------------
+
+
+def classical_noise_multiplier(epsilon: float, delta: float) -> float:
+    """σ/C of the classical Gaussian mechanism, sqrt(2 ln(1.25/δ))/ε — a
+    valid (ε, δ)-DP calibration ONLY for ε < 1 (Dwork & Roth Thm. A.1), and
+    looser than the analytic calibration everywhere it is valid. Kept for
+    the reduction tests; use :func:`analytic_gaussian_sigma` to calibrate."""
+    return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+
+
+def _phi(x: float) -> float:
+    """Standard normal CDF via erf (no scipy dependency)."""
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def gaussian_mechanism_delta(epsilon: float, sigma: float,
+                             sensitivity: float = 1.0) -> float:
+    """EXACT δ achieved by N(0, σ²) noise on a Δ-sensitive query at privacy
+    parameter ε (Balle & Wang 2018, Thm. 8):
+
+      δ(σ) = Φ(Δ/2σ − εσ/Δ) − e^ε · Φ(−Δ/2σ − εσ/Δ)
+
+    Decreasing in σ (from 1 at σ→0 to 0 at σ→∞), which is what the binary
+    search in :func:`analytic_gaussian_sigma` inverts."""
+    a = sensitivity / (2.0 * sigma)
+    b = epsilon * sigma / sensitivity
+    return _phi(a - b) - math.exp(epsilon) * _phi(-a - b)
+
+
+def analytic_gaussian_sigma(epsilon: float, delta: float,
+                            sensitivity: float = 1.0,
+                            iters: int = 200) -> float:
+    """Smallest σ with ``gaussian_mechanism_delta(ε, σ, Δ) <= δ`` — the
+    analytic Gaussian mechanism calibration, valid for EVERY ε > 0 (binary
+    search on the exact CDF condition; δ(σ) is monotone decreasing)."""
+    if epsilon <= 0 or not 0 < delta < 1:
+        raise ValueError(f"need epsilon > 0 and 0 < delta < 1, got "
+                         f"({epsilon}, {delta})")
+    lo = 1e-8 * sensitivity
+    hi = max(classical_noise_multiplier(epsilon, delta) * sensitivity,
+             sensitivity)
+    while gaussian_mechanism_delta(epsilon, hi, sensitivity) > delta:
+        hi *= 2.0
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if gaussian_mechanism_delta(epsilon, mid, sensitivity) > delta:
+            lo = mid
+        else:
+            hi = mid
+    return hi
 
 
 def noise_multiplier(dp: DPConfig) -> float:
-    """Gaussian-mechanism σ/C for (ε, δ)-DP (per round)."""
-    return math.sqrt(2.0 * math.log(1.25 / dp.delta)) / dp.epsilon
+    """σ/C of one release under ``dp``: the explicit override if set, else
+    the analytic Gaussian calibration of (ε, δ) at unit sensitivity."""
+    if dp.noise_multiplier is not None:
+        return float(dp.noise_multiplier)
+    return analytic_gaussian_sigma(dp.epsilon, dp.delta, 1.0)
 
 
-def _global_norm(tree):
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in jax.tree.leaves(tree)))
+# ---------------------------------------------------------------------------
+# cross-round accounting: subsampled-Gaussian RDP, composed over the scan
+# ---------------------------------------------------------------------------
+
+# integer Rényi orders — dense where the minimum usually lands, sparse tail
+# for very-many-round compositions
+DEFAULT_ORDERS: Sequence[int] = tuple(range(2, 65)) + (80, 96, 128, 192, 256)
+
+
+def rdp_per_round(sample_rate: float, noise_mult: float,
+                  orders: Sequence[int] = DEFAULT_ORDERS) -> np.ndarray:
+    """RDP(α) of ONE subsampled Gaussian release, per order.
+
+    Full participation (q = 1): the Gaussian mechanism's exact
+    RDP(α) = α/(2σ²). Subsampled at rate q < 1 (integer α — Abadi et al.
+    2016 Lemma 3 / Mironov et al. 2019):
+
+      RDP(α) = log( Σ_{k=0}^{α} C(α,k) (1−q)^{α−k} q^k e^{k(k−1)/2σ²} ) / (α−1)
+
+    evaluated in log-space (lgamma binomials + log-sum-exp) so large α and
+    small σ don't overflow. Host-side numpy — these are trace-time
+    constants, never traced."""
+    q, s = float(sample_rate), float(noise_mult)
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sample_rate must be in (0, 1], got {q}")
+    if s <= 0.0:
+        raise ValueError(f"noise_mult must be > 0, got {s}")
+    out = []
+    for a in orders:
+        a = int(a)
+        if a < 2:
+            raise ValueError(f"orders must be integers >= 2, got {a}")
+        if q == 1.0:
+            out.append(a / (2.0 * s * s))
+            continue
+        log_terms = [
+            math.lgamma(a + 1) - math.lgamma(k + 1) - math.lgamma(a - k + 1)
+            + (a - k) * math.log1p(-q) + k * math.log(q)
+            + k * (k - 1) / (2.0 * s * s)
+            for k in range(a + 1)
+        ]
+        m = max(log_terms)
+        log_sum = m + math.log(sum(math.exp(t - m) for t in log_terms))
+        out.append(log_sum / (a - 1))
+    return np.asarray(out, np.float64)
+
+
+def eps_from_rdp(rdp_total, delta: float,
+                 orders: Sequence[int] = DEFAULT_ORDERS):
+    """(ε, best α) from composed RDP: ε = min_α [RDP(α) + log(1/δ)/(α−1)]
+    (the standard RDP→(ε, δ) conversion)."""
+    ords = np.asarray(orders, np.float64)
+    eps = np.asarray(rdp_total, np.float64) + math.log(1.0 / delta) / (
+        ords - 1.0)
+    i = int(np.argmin(eps))
+    return float(eps[i]), int(ords[i])
+
+
+def accountant_epsilon(noise_mult: float, sample_rate: float, steps: int,
+                       delta: float,
+                       orders: Sequence[int] = DEFAULT_ORDERS) -> float:
+    """ε(δ) after ``steps`` composed subsampled-Gaussian releases at rate
+    ``sample_rate`` and noise σ/C = ``noise_mult`` — RDP composes linearly,
+    then converts once."""
+    rdp = rdp_per_round(sample_rate, noise_mult, orders)
+    return eps_from_rdp(steps * rdp, delta, orders)[0]
+
+
+def epsilon_schedule(dp: DPConfig, sample_rate: float, rounds: int,
+                     releases_per_round: int = 1,
+                     orders: Sequence[int] = DEFAULT_ORDERS) -> np.ndarray:
+    """ε-so-far after each of ``rounds`` rounds (host-side; the in-graph
+    metric of :func:`make_eps_fn` matches this array entry for entry)."""
+    rdp = rdp_per_round(sample_rate, noise_multiplier(dp),
+                        orders) * releases_per_round
+    return np.asarray([eps_from_rdp(t * rdp, dp.delta, orders)[0]
+                       for t in range(1, rounds + 1)])
+
+
+def make_eps_fn(dp: DPConfig, sample_rate: float = 1.0,
+                releases_per_round: int = 1,
+                orders: Sequence[int] = DEFAULT_ORDERS):
+    """t (global 1-based round, ``RoundInputs.t``) → ε-so-far, as a jnp
+    closure usable INSIDE the scanned step: RDP composition is linear in t,
+    so ε(t) = min_α [t·rdp(α) + log(1/δ)/(α−1)] with the per-round RDP and
+    conversion vectors baked in as small constants — any horizon, no
+    horizon-sized table."""
+    rdp = rdp_per_round(sample_rate, noise_multiplier(dp),
+                        orders) * releases_per_round
+    conv = math.log(1.0 / dp.delta) / (np.asarray(orders, np.float64) - 1.0)
+    rdp_c = jnp.asarray(rdp, jnp.float32)
+    conv_c = jnp.asarray(conv, jnp.float32)
+
+    def eps_fn(t):
+        return jnp.min(jnp.asarray(t, jnp.float32) * rdp_c + conv_c)
+
+    return eps_fn
+
+
+def manifest_info(dp: DPConfig, sample_rate: float = 1.0,
+                  rounds: Optional[int] = None,
+                  releases_per_round: int = 1) -> dict:
+    """The run-manifest record of a DP run: configuration, calibrated σ/C,
+    and (when the horizon is known) the accountant's composed ε at the end
+    of the run — so a metrics file states its own privacy budget."""
+    nm = noise_multiplier(dp)
+    info = {"clip_norm": dp.clip_norm, "epsilon": dp.epsilon,
+            "delta": dp.delta, "noise_multiplier": nm,
+            "sample_rate": sample_rate,
+            "releases_per_round": releases_per_round,
+            "accountant": "subsampled-gaussian-rdp"}
+    if rounds is not None:
+        info["rounds"] = rounds
+        info["epsilon_total"] = accountant_epsilon(
+            nm, sample_rate, rounds * releases_per_round, dp.delta)
+    return info
+
+
+# ---------------------------------------------------------------------------
+# the clip→noise stage (called by core.topology at the client boundary)
+# ---------------------------------------------------------------------------
+
+
+def clip_and_noise(flat, keys, dp: DPConfig, scale=None):
+    """The per-client clip→noise stage on stacked flat uploads.
+
+    ``flat`` is (n, P) — one row per client, holding the client's upload in
+    SUM scale (B_i-summed q-statistics); ``scale`` (n,) converts each row to
+    the clipped unit (1/B_i for batch sums; None = rows are already means).
+    Each row is scaled to its mean m_i, clipped to ``dp.clip_norm``, noised
+    with N(0, σ²C²) at the calibrated σ/C, and scaled back, so aggregation
+    weights downstream are untouched.
+
+    Returns ``(privatized (n, P), stats)`` with per-client
+    ``stats["clipped"]`` (0/1 — did the clip bind) and ``stats["noise_sq"]``
+    (Σ noise², for the streamed noise-norm metric). Pure vmapped jnp: the
+    identical bits run under the local vmap engine and inside each
+    shard_map shard."""
+    sigma = noise_multiplier(dp) * dp.clip_norm
+    n = flat.shape[0]
+    if scale is None:
+        scale = jnp.ones((n,), jnp.float32)
+
+    def one(x, k, s):
+        m = x.astype(jnp.float32) * s
+        nrm = jnp.sqrt(jnp.sum(jnp.square(m)))
+        m = m * jnp.minimum(1.0, dp.clip_norm / jnp.maximum(nrm, 1e-12))
+        noise = sigma * jax.random.normal(k, m.shape)
+        return ((m + noise) / s,
+                (nrm > dp.clip_norm).astype(jnp.float32),
+                jnp.sum(jnp.square(noise)))
+
+    priv, clipped, noise_sq = jax.vmap(one)(flat, keys,
+                                            scale.astype(jnp.float32))
+    return priv, {"clipped": clipped, "noise_sq": noise_sq}
+
+
+def privatize_flat(flat, key, dp: DPConfig):
+    """Single-stream convenience for one (P,) mean-scale upload (the pjit
+    train loop's all-reduced gradient): clip to C, add N(0, σ²C²).
+    Returns (privatized (P,), {"clipped": scalar, "noise_sq": scalar})."""
+    priv, st = clip_and_noise(flat[None], key[None], dp)
+    return priv[0], {"clipped": st["clipped"][0],
+                     "noise_sq": st["noise_sq"][0]}
 
 
 def privatize_upload(q_tree, key, dp: DPConfig):
-    """Clip a single client's q-statistic pytree to C and add N(0, σ²C²)."""
-    norm = _global_norm(q_tree)
+    """Clip a single client's q-statistic pytree to C and add N(0, σ²C²)
+    per leaf (kept for API compatibility; the round-level path is the
+    ``dp=`` argument of fed.sample_round / cohort_round / feature_round,
+    which privatizes the FLAT per-client upload inside the topology)."""
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(q_tree)))
     scale = jnp.minimum(1.0, dp.clip_norm / jnp.maximum(norm, 1e-12))
     sigma = noise_multiplier(dp) * dp.clip_norm
     leaves, treedef = jax.tree.flatten(q_tree)
@@ -53,25 +317,28 @@ def privatize_upload(q_tree, key, dp: DPConfig):
     return jax.tree.unflatten(treedef, noised)
 
 
+# ---------------------------------------------------------------------------
+# deprecated entry point (pre-dp= API)
+# ---------------------------------------------------------------------------
+
+
 def dp_sample_round(per_sample_loss, params, data, key, batch_size: int,
                     dp: DPConfig):
-    """fed.sample_round with per-client clipping + Gaussian noise on uploads.
+    """DEPRECATED: use ``fed.sample_round(..., dp=dp)`` (the codec-, EF-,
+    topology-, and cohort-composable path; same per-client clip+noise on
+    the mean gradient, same N_i/N effective weighting).
 
-    Clipping is applied to the client's *mean* gradient (q_i / B) so C is a
-    per-example-scale constant; aggregation weights are N_i/N as in (3).
-    """
+    This shim delegates to it — which also fixes the historical
+    ragged-client bias: the old inline client closure took ``jnp.take``
+    batches with no ``batch_mask``, so padded rows of clients with
+    N_i < B entered the clipped mean. Returns (grad_est, per-client
+    privatized q sums) to preserve the historical 2-tuple shape."""
+    warnings.warn(
+        "repro.core.privacy.dp_sample_round is deprecated; use "
+        "repro.core.fed.sample_round(..., dp=dp) — the dp= path composes "
+        "with codec/EF/topology/cohort and fixes the ragged-client bias",
+        DeprecationWarning, stacklevel=2)
     from repro.core import fed
-    idx = fed.sample_batches(data, key, batch_size)
-    n_total = data.total.astype(jnp.float32)
-
-    def client(feat_i, lab_i, idx_i, k):
-        zb = jnp.take(feat_i, idx_i, axis=0)
-        yb = jnp.take(lab_i, idx_i, axis=0)
-        g = jax.grad(lambda p: jnp.mean(per_sample_loss(p, zb, yb)))(params)
-        return privatize_upload(g, k, dp)
-
-    keys = jax.random.split(jax.random.fold_in(key, 1), data.num_clients)
-    q = jax.vmap(client)(data.features, data.labels, idx, keys)
-    w = data.counts.astype(jnp.float32) / n_total
-    grad_est = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), q)
-    return grad_est, q
+    grad_est, _, up = fed.sample_round(per_sample_loss, params, data, key,
+                                       batch_size, dp=dp)
+    return grad_est, up["q_grad_sums"]

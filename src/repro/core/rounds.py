@@ -49,8 +49,10 @@ class RoundInputs(NamedTuple):
     rho: jnp.ndarray          # (K,) ρ^t
     gamma: jnp.ndarray        # (K,) γ^t
     t: jnp.ndarray            # (K,) global 1-based round numbers (int32) —
-                              # labels the obs tap's streamed rows; steps
-                              # may ignore it (they carry their own t)
+                              # labels the obs tap's streamed rows and drives
+                              # the DP accountant's in-graph ε-so-far
+                              # (privacy.make_eps_fn: RDP composition is
+                              # linear in t); steps may ignore it
 
     @property
     def num_rounds(self):

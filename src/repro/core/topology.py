@@ -3,8 +3,9 @@
 The sample-based protocol (Algorithms 1/2, the SGD baselines, the
 local-update extension) has one structural invariant: every round is
 
-    per-client compute  →  per-client upload (optionally codec+EF compressed
-    at the client boundary)  →  server weighted sum  Σ_i w_i û_i
+    per-client compute  →  per-client upload (optionally DP clip+noised,
+    then codec+EF compressed, at the client boundary)  →  server weighted
+    sum  Σ_i w_i û_i
 
 with w_i = N_i/(B_i·N) (eq. 9's aggregation, generalized to ragged clients
 and Horvitz-Thompson participation reweighting). This module abstracts that
@@ -75,6 +76,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import codecs as comm_codecs
 from repro.comm import error_feedback as comm_ef
+from repro.core import privacy as privacy_lib
 from repro.obs import trace as obs_trace
 
 
@@ -86,6 +88,7 @@ class ClientSums(NamedTuple):
     values: jnp.ndarray       # per-client val_i, (I,)
     encoded: object           # codec wire format per client (None if dense)
     ef: object                # updated EF residuals (I, P) (None if dense)
+    dp: object = None         # clip/noise stats per client (None if no DP)
 
 
 def _compress_stacked(codec, uploads, ef, codec_keys, active):
@@ -105,6 +108,19 @@ def _compress_stacked(codec, uploads, ef, codec_keys, active):
     return enc, unflatten(u_hat), new_ef
 
 
+def _privatize_stacked(dp, uploads, dp_keys, dp_scale):
+    """Shared client-boundary DP stage (DESIGN.md §15): flatten each
+    client's upload to one (P,) vector and clip+noise it at mean scale
+    (``dp_scale`` = 1/B_i converts the B_i-sum; None = already means).
+    Runs BEFORE :func:`_compress_stacked`, so the codec wire format, the
+    bytes accounting, and the EF residual all see the privatized upload.
+    Identical code under local vmap and inside each shard_map shard — the
+    sharded psum aggregates already-noised contributions."""
+    uf, unflatten = comm_codecs.flatten_stacked(uploads)
+    priv, stats = privacy_lib.clip_and_noise(uf, dp_keys, dp, dp_scale)
+    return unflatten(priv), stats
+
+
 class FeatureSums(NamedTuple):
     """Everything an Algorithm-3/4 vertical round produces at and across the
     client boundary (the feature-based analog of :class:`ClientSums`)."""
@@ -115,6 +131,7 @@ class FeatureSums(NamedTuple):
     q_blocks: object          # q_{f,0,i} block uploads, (I, ...) pytree
     encoded: object           # {"q_head","q_blocks"} wire formats (None dense)
     ef: object                # {"w0": (P0,), "blocks": (I, Pb)} residuals
+    dp: object = None         # clip/noise stats per stream (None if no DP)
 
 
 def _compress_feature(codec, q_head, q_blocks, ef, head_key, block_keys):
@@ -137,6 +154,29 @@ def _compress_feature(codec, q_head, q_blocks, ef, head_key, block_keys):
             {"w0": r0, "blocks": rb})
 
 
+def _privatize_feature(dp, q_head, q_blocks, dp_head_key, dp_block_keys,
+                       dp_scale):
+    """Client-boundary DP stage for the feature-based uploads: the ONE head
+    stream (q_{f,0,0}) plus one stream per client block (q_{f,0,i}), each
+    clipped and noised at mean scale (``dp_scale`` = 1/B — the uploads are
+    batch sums) BEFORE :func:`_compress_feature`. Under the sharded
+    topology the head stage is replicated compute on bit-identical inputs
+    (same key → same noise), so every shard agrees; the step-4 h-exchange
+    itself is NOT privatized (it feeds gradients, not the released
+    aggregate — documented in DESIGN.md §15)."""
+    f0, unf0 = comm_codecs.flatten_tree(q_head)
+    p0, st0 = privacy_lib.clip_and_noise(
+        f0[None], dp_head_key[None], dp, jnp.full((1,), dp_scale))
+    fb, unfb = comm_codecs.flatten_stacked(q_blocks)
+    pb, stb = privacy_lib.clip_and_noise(
+        fb, dp_block_keys, dp, jnp.full((fb.shape[0],), dp_scale))
+    stats = {"head_clipped": st0["clipped"][0],
+             "head_noise_sq": st0["noise_sq"][0],
+             "blocks_clipped": stb["clipped"],
+             "blocks_noise_sq": stb["noise_sq"]}
+    return unf0(p0[0]), unfb(pb), stats
+
+
 def _weighted(weights, uploads, values):
     weighted = jax.tree.map(
         lambda u: jnp.tensordot(weights, u.astype(jnp.float32), axes=1),
@@ -152,13 +192,19 @@ class LocalTopology:
     num_shards = 1
 
     def weighted_sum(self, client_fn: Callable, args, weights, *,
-                     codec=None, ef=None, codec_keys=None,
-                     active=None) -> ClientSums:
+                     codec=None, ef=None, codec_keys=None, active=None,
+                     dp=None, dp_keys=None, dp_scale=None) -> ClientSums:
         """client_fn(*per_client_args) -> (upload pytree, val scalar); args
-        are (I, ...)-leading arrays; returns all of :class:`ClientSums`."""
+        are (I, ...)-leading arrays; returns all of :class:`ClientSums`.
+        With ``dp=`` (a privacy.DPConfig) each client's upload is
+        clipped+noised at the client boundary BEFORE any codec encode."""
         with obs_trace.phase("client-compute"):
             uploads, values = jax.vmap(client_fn)(*args)
-        enc = new_ef = None
+        enc = new_ef = dp_stats = None
+        if dp is not None:
+            with obs_trace.phase("dp-privatize"):
+                uploads, dp_stats = _privatize_stacked(dp, uploads, dp_keys,
+                                                       dp_scale)
         if codec is not None:
             with obs_trace.phase("codec-encode"):
                 enc, uploads, new_ef = _compress_stacked(codec, uploads, ef,
@@ -166,19 +212,22 @@ class LocalTopology:
         with obs_trace.phase("aggregate"):
             weighted, value = _weighted(weights, uploads, values)
         return ClientSums(weighted=weighted, value=value, uploads=uploads,
-                          values=values, encoded=enc, ef=new_ef)
+                          values=values, encoded=enc, ef=new_ef, dp=dp_stats)
 
     def feature_sum(self, h_fn: Callable, head_fn: Callable,
                     block_grad_fn: Callable, blocks, zb, *,
-                    codec=None, ef=None, head_key=None,
-                    block_keys=None) -> FeatureSums:
+                    codec=None, ef=None, head_key=None, block_keys=None,
+                    dp=None, dp_head_key=None, dp_block_keys=None,
+                    dp_scale=1.0) -> FeatureSums:
         """Alg-3/4 information flow, all clients on one device.
 
         h_fn(block_i, zb_i) -> (B, J) per-client h; head_fn(h_sum) ->
         (value, q_head, dl_dh) closes over the head params and labels;
         block_grad_fn(block_i, zb_i, dl_dh) -> q_{f,0,i}. blocks/zb are
-        (I, ...)-leading. This vmap path is the bit-level reference every
-        sharded result is pinned against."""
+        (I, ...)-leading. With ``dp=`` the head + block q-uploads are
+        clipped+noised before any codec encode (the h-exchange stays in
+        the clear — DESIGN.md §15). This vmap path is the bit-level
+        reference every sharded result is pinned against."""
         with obs_trace.phase("client-compute"):
             h = jax.vmap(h_fn)(blocks, zb)                   # (I, B, J)
         with obs_trace.phase("aggregate"):
@@ -188,13 +237,19 @@ class LocalTopology:
         with obs_trace.phase("client-compute"):
             q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
                 blocks, zb, dl_dh)
-        enc = new_ef = None
+        enc = new_ef = dp_stats = None
+        if dp is not None:
+            with obs_trace.phase("dp-privatize"):
+                q_head, q_blocks, dp_stats = _privatize_feature(
+                    dp, q_head, q_blocks, dp_head_key, dp_block_keys,
+                    dp_scale)
         if codec is not None:
             with obs_trace.phase("codec-encode"):
                 enc, q_head, q_blocks, new_ef = _compress_feature(
                     codec, q_head, q_blocks, ef, head_key, block_keys)
         return FeatureSums(h=h, h_sum=h_sum, value=value, q_head=q_head,
-                           q_blocks=q_blocks, encoded=enc, ef=new_ef)
+                           q_blocks=q_blocks, encoded=enc, ef=new_ef,
+                           dp=dp_stats)
 
     def place_state(self, state):
         """No placement to do on a single device."""
@@ -262,22 +317,30 @@ class ShardedTopology:
                             is_leaf=lambda v: isinstance(v, comm_ef.EFStore)))
 
     def weighted_sum(self, client_fn: Callable, args, weights, *,
-                     codec=None, ef=None, codec_keys=None,
-                     active=None) -> ClientSums:
+                     codec=None, ef=None, codec_keys=None, active=None,
+                     dp=None, dp_keys=None, dp_scale=None) -> ClientSums:
         """Same contract as :meth:`LocalTopology.weighted_sum`, executed
-        shard-locally with the server sum as a weighted psum. Codec encode +
-        EF update run per shard BEFORE the collective: what crosses the
-        device boundary is the already-weighted decoded aggregate, and the
-        wire format / residuals stay client-resident."""
+        shard-locally with the server sum as a weighted psum. The DP
+        clip+noise stage, codec encode, and EF update all run per shard
+        BEFORE the collective: each shard noises its own resident clients'
+        uploads, so the psum aggregates already-noised contributions and
+        what crosses the device boundary is the already-weighted decoded
+        privatized aggregate — the wire format / residuals stay
+        client-resident."""
         self._check_divisible(weights.shape[0])
         axes = self.axes
         spec = P(axes)
         has_codec = codec is not None
+        has_dp = dp is not None
 
-        def body(args_l, weights_l, ef_l, keys_l, act_l):
+        def body(args_l, weights_l, ef_l, keys_l, act_l, dpk_l, dps_l):
             with obs_trace.phase("client-compute"):
                 uploads, values = jax.vmap(client_fn)(*args_l)
-            enc = new_ef = None
+            enc = new_ef = dp_stats = None
+            if has_dp:
+                with obs_trace.phase("dp-privatize"):
+                    uploads, dp_stats = _privatize_stacked(dp, uploads,
+                                                           dpk_l, dps_l)
             if has_codec:
                 with obs_trace.phase("codec-encode"):
                     enc, uploads, new_ef = _compress_stacked(
@@ -287,17 +350,17 @@ class ShardedTopology:
             with obs_trace.phase("collective"):
                 weighted = jax.lax.psum(partial, axes)
                 value = jax.lax.psum(val_partial, axes)
-            return weighted, value, uploads, values, enc, new_ef
+            return weighted, value, uploads, values, enc, new_ef, dp_stats
 
         sharded = shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec, spec, spec, spec, spec),
-            out_specs=(P(), P(), spec, spec, spec, spec),
+            in_specs=(spec, spec, spec, spec, spec, spec, spec),
+            out_specs=(P(), P(), spec, spec, spec, spec, spec),
             check_rep=False)
-        weighted, value, uploads, values, enc, new_ef = sharded(
-            tuple(args), weights, ef, codec_keys, active)
+        weighted, value, uploads, values, enc, new_ef, dp_stats = sharded(
+            tuple(args), weights, ef, codec_keys, active, dp_keys, dp_scale)
         return ClientSums(weighted=weighted, value=value, uploads=uploads,
-                          values=values, encoded=enc, ef=new_ef)
+                          values=values, encoded=enc, ef=new_ef, dp=dp_stats)
 
     def place_feature_state(self, state):
         """Pre-place a feature-based `CommCarry`'s EF residual dict: the
@@ -315,30 +378,36 @@ class ShardedTopology:
 
     def feature_sum(self, h_fn: Callable, head_fn: Callable,
                     block_grad_fn: Callable, blocks, zb, *,
-                    codec=None, ef=None, head_key=None,
-                    block_keys=None) -> FeatureSums:
+                    codec=None, ef=None, head_key=None, block_keys=None,
+                    dp=None, dp_head_key=None, dp_block_keys=None,
+                    dp_scale=1.0) -> FeatureSums:
         """Same contract as :meth:`LocalTopology.feature_sum`, with each
         shard running its I/D resident feature clients and the paper's
         step-4 h-broadcast realized as a tiled `lax.all_gather` over the
         client axes: every shard reassembles the FULL (I, B, J) h in
         canonical client order, so Σ_i h_i — and everything downstream of
         it (head gradient, dl/dh, block gradients, codec wire formats) —
-        is bit-identical to the local reference. The head computation and
-        its codec roundtrip are replicated per shard (same inputs, same
-        key → same bits); block gradients and their EF residuals never
-        leave their shard."""
+        is bit-identical to the local reference. The head computation, its
+        DP clip+noise, and its codec roundtrip are replicated per shard
+        (same inputs, same keys → same bits); block gradients, their noise
+        draws, and their EF residuals never leave their shard."""
         num_clients = jax.tree.leaves(blocks)[0].shape[0]
         self._check_divisible(num_clients)
         axes = self.axes
         spec = P(axes)
         has_codec = codec is not None
+        has_dp = dp is not None
         ef_spec = ({"w0": P(), "blocks": spec}
                    if has_codec and ef is not None else P())
         keys_spec = spec if block_keys is not None else P()
         enc_spec = {"q_head": P(), "q_blocks": spec} if has_codec else P()
         ef_out_spec = {"w0": P(), "blocks": spec} if has_codec else P()
+        dp_keys_spec = spec if dp_block_keys is not None else P()
+        dp_out_spec = ({"head_clipped": P(), "head_noise_sq": P(),
+                        "blocks_clipped": spec, "blocks_noise_sq": spec}
+                       if has_dp else P())
 
-        def body(blocks_l, zb_l, ef_l, bkeys_l, hkey):
+        def body(blocks_l, zb_l, ef_l, bkeys_l, hkey, dpbk_l, dphk):
             with obs_trace.phase("client-compute"):
                 h_l = jax.vmap(h_fn)(blocks_l, zb_l)         # (I/D, B, J)
             with obs_trace.phase("collective"):
@@ -350,22 +419,28 @@ class ShardedTopology:
             with obs_trace.phase("client-compute"):
                 q_blocks = jax.vmap(block_grad_fn, in_axes=(0, 0, None))(
                     blocks_l, zb_l, dl_dh)
-            enc = new_ef = None
+            enc = new_ef = dp_stats = None
+            if has_dp:
+                with obs_trace.phase("dp-privatize"):
+                    q_head, q_blocks, dp_stats = _privatize_feature(
+                        dp, q_head, q_blocks, dphk, dpbk_l, dp_scale)
             if has_codec:
                 with obs_trace.phase("codec-encode"):
                     enc, q_head, q_blocks, new_ef = _compress_feature(
                         codec, q_head, q_blocks, ef_l, hkey, bkeys_l)
-            return h_l, h_sum, value, q_head, q_blocks, enc, new_ef
+            return h_l, h_sum, value, q_head, q_blocks, enc, new_ef, dp_stats
 
         sharded = shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec, spec, ef_spec, keys_spec, P()),
-            out_specs=(spec, P(), P(), P(), spec, enc_spec, ef_out_spec),
+            in_specs=(spec, spec, ef_spec, keys_spec, P(), dp_keys_spec, P()),
+            out_specs=(spec, P(), P(), P(), spec, enc_spec, ef_out_spec,
+                       dp_out_spec),
             check_rep=False)
-        h, h_sum, value, q_head, q_blocks, enc, new_ef = sharded(
-            blocks, zb, ef, block_keys, head_key)
+        h, h_sum, value, q_head, q_blocks, enc, new_ef, dp_stats = sharded(
+            blocks, zb, ef, block_keys, head_key, dp_block_keys, dp_head_key)
         return FeatureSums(h=h, h_sum=h_sum, value=value, q_head=q_head,
-                           q_blocks=q_blocks, encoded=enc, ef=new_ef)
+                           q_blocks=q_blocks, encoded=enc, ef=new_ef,
+                           dp=dp_stats)
 
 
 LOCAL = LocalTopology()

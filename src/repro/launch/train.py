@@ -47,6 +47,14 @@ shards derived on the fly from the client id (`data.synthetic
 permutation, EF residuals in a keyed store gathered/scattered per round —
 so per-round compute and state scale with S while I goes to a million.
 
+Differential privacy (DESIGN.md §15): ``--dp-epsilon 4 [--dp-delta 1e-5
+--dp-clip 1.0]`` clips + Gaussian-noises every gradient upload at the
+client boundary BEFORE the codec (analytic Gaussian calibration), streams
+dp_epsilon (the subsampled-RDP accountant's composed ε-so-far), clip
+fraction, and noise norm per round, and records the full accounting in the
+run manifest. Works in every mode; cohort mode's S-of-I draw earns the
+subsampling amplification.
+
 CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
           --steps 100 --batch 8 --seq 512 [--constrained] [--smoke] \
           [--driver scan|loop] [--codec int8] [--topk-frac 0.01] \
@@ -75,6 +83,7 @@ from repro.comm import (CommCarry, ef_init, ef_init_stacked, ef_roundtrip,
                         with_comm_carry)
 from repro.configs import FLConfig, get_config
 from repro.core import optimizer, rounds
+from repro.core import privacy as privacy_lib
 from repro.core import topology as topology_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import get_model
@@ -167,7 +176,8 @@ def jit_train_step(model, cfg, fl, mesh, batch_like, constrained=False):
 
 
 def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
-                      constrained: bool = False, codec=None, topology=None):
+                      constrained: bool = False, codec=None, topology=None,
+                      dp=None):
     """Fuses per-round data selection into the train step so the whole round
     chain is scannable: step(state, RoundInputs) -> (state, metrics). With a
     codec, the gradient is compressed through an error-feedback roundtrip
@@ -177,9 +187,16 @@ def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
     shards and the gradient (+ loss) estimate is computed by the topology
     engine — per-shard value_and_grad, per-shard codec/EF (residuals become
     an (D, P) matrix in the CommCarry), equal-weight 1/D psum aggregation.
-    The local path is byte-identical to before."""
+    The local path is byte-identical to before.
+
+    ``dp=`` (privacy.DPConfig) clips+noises the gradient upload(s) before
+    any codec encode (DESIGN.md §15) — per shard on the sharded path, on
+    the single all-reduced gradient on the local path — and adds the dp_*
+    metrics (all shards release every round, so the accountant runs at
+    q = 1)."""
     from repro.data.synthetic import sample_window
 
+    eps_fn = privacy_lib.make_eps_fn(dp, 1.0) if dp is not None else None
     shards = getattr(topology, "num_shards", 1) if topology is not None else 1
     if topology is not None and topology.name == "sharded":
         if batch % shards:
@@ -199,14 +216,22 @@ def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
 
             ckeys = (jax.random.split(jax.random.fold_in(inp.key, 0xC0DEC),
                                       shards) if codec is not None else None)
+            dkeys = (jax.random.split(jax.random.fold_in(inp.key, 0xD9),
+                                      shards) if dp is not None else None)
             w = jnp.full((shards,), 1.0 / shards, jnp.float32)
             s = topology.weighted_sum(client_fn, (shard,), w, codec=codec,
-                                      ef=ef, codec_keys=ckeys)
+                                      ef=ef, codec_keys=ckeys, dp=dp,
+                                      dp_keys=dkeys)
             new, metrics = _ssca_update(state, s.value, s.weighted, fl,
                                         inp.rho, inp.gamma, constrained)
             if codec is not None:
                 metrics["upload_bytes"] = float(
                     shards * codec.nbytes(tree_flat_dim(state.params)))
+            if dp is not None:
+                metrics["dp_epsilon"] = eps_fn(inp.t)
+                metrics["dp_clip_frac"] = jnp.mean(s.dp["clipped"])
+                metrics["dp_noise_norm"] = jnp.sqrt(
+                    jnp.sum(s.dp["noise_sq"]))
             return new, s.ef, metrics
 
         return with_comm_carry(codec, sharded_body)
@@ -218,22 +243,35 @@ def make_scanned_step(model, cfg, fl: FLConfig, tokens, batch: int, seq: int,
         data = sample_window(tokens, inp.key, batch, seq)
         return train_step(state, data, rho_t=inp.rho, gamma_t=inp.gamma)
 
-    if codec is None:
+    if codec is None and dp is None:
         return step
 
-    def codec_body(state, inp, ef):
+    def comm_body(state, inp, ef):
         data = sample_window(tokens, inp.key, batch, seq)
         loss, grads = jax.value_and_grad(model.loss_fn)(state.params, data,
                                                         cfg)
         gf, unflatten = flatten_tree(grads)
-        _, g_hat, new_ef = ef_roundtrip(
-            codec, gf, ef, jax.random.fold_in(inp.key, 0xC0DEC))
+        metrics_dp = None
+        if dp is not None:
+            gf, dstats = privacy_lib.privatize_flat(
+                gf, jax.random.fold_in(inp.key, 0xD9), dp)
+            metrics_dp = {"dp_epsilon": eps_fn(inp.t),
+                          "dp_clip_frac": dstats["clipped"],
+                          "dp_noise_norm": jnp.sqrt(dstats["noise_sq"])}
+        if codec is not None:
+            _, g_hat, new_ef = ef_roundtrip(
+                codec, gf, ef, jax.random.fold_in(inp.key, 0xC0DEC))
+        else:
+            g_hat, new_ef = gf, ef
         new, metrics = _ssca_update(state, loss, unflatten(g_hat), fl,
                                     inp.rho, inp.gamma, constrained)
-        metrics["upload_bytes"] = float(codec.nbytes(gf.shape[0]))
+        if codec is not None:
+            metrics["upload_bytes"] = float(codec.nbytes(gf.shape[0]))
+        if metrics_dp is not None:
+            metrics.update(metrics_dp)
         return new, new_ef, metrics
 
-    return with_comm_carry(codec, codec_body)
+    return with_comm_carry(codec, comm_body)
 
 
 def train_loop(arch: str, steps: int, batch: int, seq: int, *,
@@ -244,7 +282,8 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                topk_frac: float = 0.01, codec_impl: str = "ref",
                topology: str = "local", shards: Optional[int] = None,
                log_jsonl: Optional[str] = None, log_stream_every: int = 1,
-               profile_dir: Optional[str] = None):
+               profile_dir: Optional[str] = None,
+               dp: Optional[privacy_lib.DPConfig] = None):
     from repro.data.synthetic import token_dataset
 
     cfg = get_config(arch)
@@ -270,7 +309,7 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
     toks = token_dataset(jax.random.fold_in(key, 1), cfg.vocab_size,
                          n_tokens=max(200_000, batch * (seq + 1) * 4))
     step_fn = make_scanned_step(model, cfg, fl, toks, batch, seq, constrained,
-                                codec=codec_obj, topology=topo)
+                                codec=codec_obj, topology=topo, dp=dp)
     engine = rounds.ENGINES[driver]
     sizes = rounds.chunk_sizes(steps, log_every)
 
@@ -287,7 +326,9 @@ def train_loop(arch: str, steps: int, batch: int, seq: int, *,
                     "constrained": constrained, "driver": driver,
                     "smoke": smoke, "seed": seed},
             codec=codec_obj, topology=topo,
-            cost=jit_cost_summary(step_fn, state, probe))
+            cost=jit_cost_summary(step_fn, state, probe),
+            extra=({"dp": privacy_lib.manifest_info(dp, 1.0, rounds=steps)}
+                   if dp is not None else None))
 
     logs = []
     t0, done = 1, 0
@@ -332,7 +373,8 @@ def feature_train_loop(*, clients: int = 4, rounds: int = 200,
                        seed: int = 0, fl: Optional[FLConfig] = None,
                        log_jsonl: Optional[str] = None,
                        log_stream_every: int = 1,
-                       profile_dir: Optional[str] = None):
+                       profile_dir: Optional[str] = None,
+                       dp: Optional[privacy_lib.DPConfig] = None):
     """Vertical-FL driver: synthetic classification, features split into
     `clients` blocks, MLP head composition (models/mlp.py), Algorithm 3 or
     (constrained) Algorithm 4 via run_feature_rounds. Returns the RunResult.
@@ -384,13 +426,16 @@ def feature_train_loop(*, clients: int = 4, rounds: int = 200,
                     "batch": batch, "features": features, "classes": classes,
                     "hidden": hidden, "n": n, "constrained": constrained,
                     "cost_limit": cost_limit, "driver": driver, "seed": seed},
-            codec=codec_obj, topology=topo)
+            codec=codec_obj, topology=topo,
+            extra=({"dp": privacy_lib.manifest_info(
+                dp, 1.0, rounds=rounds, releases_per_round=2)}
+                if dp is not None else None))
     wall0 = time.time()
     with prof, spans.span("run", rounds=rounds):
         result = alg(mlp.per_sample_loss_from_h, mlp.client_h, params0, data,
                      fl, rounds, jax.random.fold_in(key, 2), eval_fn=eval_fn,
                      eval_every=log_every, driver=driver, codec=codec_obj,
-                     topology=topo, obs=stream if log_jsonl else None)
+                     topology=topo, obs=stream if log_jsonl else None, dp=dp)
     stream.close()
     for i, r in enumerate(result.history["round"]):
         line = {k: float(v[i]) for k, v in result.history.items()
@@ -419,7 +464,8 @@ def cohort_train_loop(*, clients: int = 100_000, participation: int = 256,
                       seed: int = 0, fl: Optional[FLConfig] = None,
                       log_jsonl: Optional[str] = None,
                       log_stream_every: int = 1,
-                      profile_dir: Optional[str] = None):
+                      profile_dir: Optional[str] = None,
+                      dp: Optional[privacy_lib.DPConfig] = None):
     """Million-client horizontal FL driver: a `VirtualFedData` population of
     ``clients`` ragged Dirichlet-skewed shards (never materialized — every
     row derives from the client id), Algorithm 1 (or 2 with --constrained)
@@ -466,14 +512,17 @@ def cohort_train_loop(*, clients: int = 100_000, participation: int = 256,
                     "batch": batch, "features": features, "classes": classes,
                     "hidden": hidden, "constrained": constrained,
                     "cost_limit": cost_limit, "driver": driver, "seed": seed},
-            codec=codec_obj, topology=topo)
+            codec=codec_obj, topology=topo,
+            extra=({"dp": privacy_lib.manifest_info(
+                dp, min(1.0, participation / clients), rounds=rounds)}
+                if dp is not None else None))
     wall0 = time.time()
     with prof, spans.span("run", rounds=rounds):
         result = alg(mlp.per_sample_loss, params0, data, fl, rounds,
                      jax.random.fold_in(key, 2), eval_fn=eval_fn,
                      eval_every=log_every, participation=participation,
                      driver=driver, codec=codec_obj, topology=topo,
-                     obs=stream if log_jsonl else None, cohort=True)
+                     obs=stream if log_jsonl else None, cohort=True, dp=dp)
     stream.close()
     for i, r in enumerate(result.history["round"]):
         line = {k: float(v[i]) for k, v in result.history.items()
@@ -534,6 +583,17 @@ def main():
     ap.add_argument("--shards", type=int, default=None,
                     help="client-shard count for --topology sharded "
                          "(default: all host devices; must divide --batch)")
+    ap.add_argument("--dp-epsilon", type=float, default=None, metavar="EPS",
+                    help="enable DP on the q-uploads (DESIGN.md §15): "
+                         "per-release (ε, δ) target for the analytic "
+                         "Gaussian calibration; the streamed dp_epsilon "
+                         "metric and the manifest report the composed "
+                         "cross-round ε from the subsampled-RDP accountant")
+    ap.add_argument("--dp-delta", type=float, default=1e-5, metavar="DELTA",
+                    help="DP δ (with --dp-epsilon; default 1e-5)")
+    ap.add_argument("--dp-clip", type=float, default=1.0, metavar="C",
+                    help="DP ℓ2 clip norm of each client's mean upload "
+                         "(with --dp-epsilon; default 1.0)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-jsonl", default=None, metavar="PATH",
                     help="stream round/eval/span rows to PATH as JSONL while "
@@ -545,6 +605,9 @@ def main():
                     help="jax.profiler trace of the whole run into DIR "
                          "(phase-annotated; open with xprof/perfetto)")
     args = ap.parse_args()
+    dp = (privacy_lib.DPConfig(clip_norm=args.dp_clip,
+                               epsilon=args.dp_epsilon, delta=args.dp_delta)
+          if args.dp_epsilon is not None else None)
     if args.mode == "cohort":
         cohort_train_loop(clients=args.clients,
                           participation=args.participation,
@@ -557,7 +620,7 @@ def main():
                           codec_impl=args.codec_impl, driver=args.driver,
                           log_jsonl=args.log_jsonl,
                           log_stream_every=args.log_every,
-                          profile_dir=args.profile)
+                          profile_dir=args.profile, dp=dp)
         return
     if args.mode == "feature":
         feature_train_loop(clients=args.clients, rounds=args.steps,
@@ -570,7 +633,7 @@ def main():
                            codec_impl=args.codec_impl, driver=args.driver,
                            log_jsonl=args.log_jsonl,
                            log_stream_every=args.log_every,
-                           profile_dir=args.profile)
+                           profile_dir=args.profile, dp=dp)
         return
     if args.arch is None:
         ap.error("--arch is required for --mode sample")
@@ -580,7 +643,7 @@ def main():
                topk_frac=args.topk_frac, codec_impl=args.codec_impl,
                topology=args.topology, shards=args.shards,
                log_jsonl=args.log_jsonl, log_stream_every=args.log_every,
-               profile_dir=args.profile)
+               profile_dir=args.profile, dp=dp)
 
 
 if __name__ == "__main__":

@@ -44,7 +44,12 @@ independent of the log rate.
 Rows are flat dicts (``{"kind": "round", "t": <global round>, <metric>:
 float, ...}``) appended to :attr:`MetricStream.rows` and fanned out to the
 sinks (obs/sinks.py). `emit_event` lets drivers interleave eval results and
-host spans into the same ordered log.
+host spans into the same ordered log. Whatever the step's metrics dict
+carries streams untouched — a DP run (core/privacy.py, DESIGN.md §15) adds
+``dp_epsilon`` (the RDP accountant's composed ε through round t, computed
+in-graph from the row's own ``t``), ``dp_clip_frac``, and
+``dp_noise_norm`` rows this way, and the run manifest (obs/sinks.py
+``extra=``) records the matching calibration + end-of-run ε.
 """
 from __future__ import annotations
 

@@ -1,0 +1,405 @@
+"""DP layer invariants (DESIGN.md §15): the analytic Gaussian calibration,
+the subsampled-RDP cross-round accountant, and the clip→noise stage composed
+with the full risk surface — DP × {identity, int8+EF} × {local, sharded} ×
+{full, S-of-I, cohort}.
+
+Pinned here:
+* calibration — the analytic σ achieves the exact Balle-Wang δ, is never
+  looser than the classical sqrt(2 ln(1.25/δ))/ε closed form, and the
+  classical form remains a valid (if loose) calibration in its ε < 1 regime;
+* accounting — the streamed dp_epsilon comes from the subsampled-RDP
+  accountant (hand-computed 2-round case recomputed independently in the
+  test, binomial-sum RDP recomputation for q < 1), composes monotonically
+  over K rounds, and shows subsampling amplification;
+* composition — dp=None is bitwise-identical to the pre-DP path; with DP on
+  and fixed noise keys, dense == cohort and local == sharded trajectories
+  agree at atol 1e-5, with and without int8+EF; the noised aggregate is
+  unbiased (5σ over averaged rounds); the clip-fraction metric matches a
+  from-scratch per-client norm computation;
+* the deprecated privacy.dp_sample_round shim warns and delegates;
+* checkpoint dtype safety (the satellite fix): load_checkpoint raises on a
+  dtype mismatch unless cast=True.
+
+On a single-device run the sharded cases degenerate to one shard but still
+exercise the shard_map + psum path; the multi-device CI job re-runs this
+file with 8 virtual devices (real per-shard noise before the psum).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import ef_init, ef_init_stacked, make_codec
+from repro.comm.codecs import tree_flat_dim
+from repro.configs.base import FLConfig
+from repro.core import algorithms, fed, privacy
+from repro.core.topology import feature_sharded_for, sharded_for
+from repro.models import mlp
+
+P, J, L = 12, 6, 3
+I = 8                                  # client count; divisible by 1/2/4/8
+B = 20
+S = 4                                  # cohort size for partial participation
+DELTA = 1e-5
+
+
+def _data(key, n=240):
+    z = jax.random.normal(key, (n, P))
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, L)
+    return fed.partition_samples(z, jax.nn.one_hot(lab, L), I)
+
+
+def _params0(key):
+    return mlp.init(key, P, J, L)
+
+
+def _fl(**kw):
+    base = dict(batch_size=B, a1=0.9, a2=0.5, alpha_rho=0.1,
+                alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_trees_close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+psl = mlp.per_sample_loss
+
+
+# ---------------------------------------------------------------------------
+# calibration: analytic Gaussian mechanism vs the classical closed form
+# ---------------------------------------------------------------------------
+
+
+EPS_GRID = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+
+
+def test_analytic_sigma_achieves_delta_exactly():
+    for eps in EPS_GRID:
+        sigma = privacy.analytic_gaussian_sigma(eps, DELTA)
+        d = privacy.gaussian_mechanism_delta(eps, sigma)
+        # binary search converges to the boundary of the exact condition
+        assert d <= DELTA
+        assert d > 0.999 * DELTA, (eps, sigma, d)
+
+
+def test_analytic_never_looser_than_classical():
+    for eps in EPS_GRID:
+        an = privacy.analytic_gaussian_sigma(eps, DELTA)
+        cl = privacy.classical_noise_multiplier(eps, DELTA)
+        assert an <= cl * (1 + 1e-12), (eps, an, cl)
+    # where the classical form is OUT of its ε < 1 regime (the historical
+    # default ε = 8) the analytic calibration is strictly tighter
+    assert (privacy.analytic_gaussian_sigma(8.0, DELTA)
+            < 0.9999 * privacy.classical_noise_multiplier(8.0, DELTA))
+
+
+def test_classical_bound_recovered_for_small_eps():
+    # in its validity regime ε < 1 the classical σ satisfies the exact
+    # condition — the analytic mechanism reduces to (tightens) it rather
+    # than contradicting it
+    for eps in (0.1, 0.25, 0.5):
+        cl = privacy.classical_noise_multiplier(eps, DELTA)
+        assert privacy.gaussian_mechanism_delta(eps, cl) <= DELTA
+
+
+def test_noise_multiplier_override_and_validation():
+    dp = privacy.DPConfig(epsilon=4.0, delta=DELTA, noise_multiplier=3.5)
+    assert privacy.noise_multiplier(dp) == 3.5
+    dp2 = privacy.DPConfig(epsilon=4.0, delta=DELTA)
+    assert privacy.noise_multiplier(dp2) == pytest.approx(
+        privacy.analytic_gaussian_sigma(4.0, DELTA))
+    with pytest.raises(ValueError):
+        privacy.analytic_gaussian_sigma(-1.0, DELTA)
+    with pytest.raises(ValueError):
+        privacy.analytic_gaussian_sigma(1.0, 2.0)
+
+
+# ---------------------------------------------------------------------------
+# accountant: subsampled-Gaussian RDP, composed over rounds
+# ---------------------------------------------------------------------------
+
+
+def test_accountant_matches_hand_computed_two_round_case():
+    # q = 1, σ = 2, K = 2: RDP(α) = α/(2σ²) per release, composes to
+    # 2α/(2σ²); ε = min_α [2α/(2σ²) + ln(1/δ)/(α−1)] — recomputed from
+    # scratch here with a plain python loop over the same orders
+    sigma = 2.0
+    hand = min(2.0 * a / (2.0 * sigma ** 2)
+               + math.log(1.0 / DELTA) / (a - 1)
+               for a in privacy.DEFAULT_ORDERS)
+    got = privacy.accountant_epsilon(sigma, 1.0, 2, DELTA)
+    assert got == pytest.approx(hand, rel=1e-12)
+
+
+def test_subsampled_rdp_matches_binomial_recomputation():
+    # q < 1 integer-α bound recomputed directly with math.comb (no
+    # log-space tricks) at small α / moderate σ where it cannot overflow
+    q, sigma = 0.25, 2.0
+    rdp = privacy.rdp_per_round(q, sigma, orders=(2, 3, 8))
+    for a, got in zip((2, 3, 8), rdp):
+        s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                * math.exp(k * (k - 1) / (2.0 * sigma ** 2))
+                for k in range(a + 1))
+        assert got == pytest.approx(math.log(s) / (a - 1), rel=1e-10)
+
+
+def test_epsilon_monotone_and_subsampling_amplification():
+    dp = privacy.DPConfig(epsilon=2.0, delta=DELTA)
+    sched = privacy.epsilon_schedule(dp, 1.0, 10)
+    assert np.all(np.diff(sched) > 0)
+    nm = privacy.noise_multiplier(dp)
+    full = privacy.accountant_epsilon(nm, 1.0, 10, DELTA)
+    sub = privacy.accountant_epsilon(nm, 0.25, 10, DELTA)
+    assert sub < full / 2          # amplification by subsampling is real
+
+
+def test_eps_fn_matches_host_schedule():
+    dp = privacy.DPConfig(epsilon=4.0, delta=DELTA)
+    eps_fn = privacy.make_eps_fn(dp, 0.5, releases_per_round=2)
+    sched = privacy.epsilon_schedule(dp, 0.5, 6, releases_per_round=2)
+    got = np.asarray([float(eps_fn(t)) for t in range(1, 7)])
+    np.testing.assert_allclose(got, sched, rtol=1e-5)
+
+
+def test_manifest_info_records_accountant():
+    dp = privacy.DPConfig(clip_norm=2.0, epsilon=4.0, delta=DELTA)
+    info = privacy.manifest_info(dp, 0.5, rounds=10)
+    assert info["accountant"] == "subsampled-gaussian-rdp"
+    assert info["clip_norm"] == 2.0
+    assert info["epsilon_total"] == pytest.approx(privacy.accountant_epsilon(
+        privacy.noise_multiplier(dp), 0.5, 10, DELTA))
+
+
+# ---------------------------------------------------------------------------
+# composition matrix: DP × codec/EF × topology × participation
+# ---------------------------------------------------------------------------
+
+
+def test_dp_none_round_is_unchanged():
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    g0, v0, up0 = fed.sample_round(psl, params, data, jax.random.PRNGKey(2),
+                                   B)
+    g1, v1, up1 = fed.sample_round(psl, params, data, jax.random.PRNGKey(2),
+                                   B, dp=None)
+    assert up0["dp"] is None and up1["dp"] is None
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dp_none_driver_trajectory_bitwise_unchanged():
+    data = _data(jax.random.PRNGKey(0))
+    fl = _fl()
+    params0 = _params0(jax.random.PRNGKey(1))
+    r0 = algorithms.algorithm1(psl, params0, data, fl, 4,
+                               jax.random.PRNGKey(3))
+    r1 = algorithms.algorithm1(psl, params0, data, fl, 4,
+                               jax.random.PRNGKey(3), dp=None)
+    for a, b in zip(jax.tree.leaves(r0.params), jax.tree.leaves(r1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "round_dp_epsilon" not in r0.history
+
+
+def test_noised_aggregate_unbiased_5sigma():
+    # loose clip (never binds) → dp aggregate − dense aggregate is exactly
+    # the weighted noise Σ_i (N_i/N)·η_i, η_i ~ N(0, σ²C²I); averaging R
+    # independent noise draws on the SAME batches shrinks it by sqrt(R)
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=100.0, epsilon=8.0, delta=DELTA)
+    rk = jax.random.PRNGKey(5)
+    g_dense, _, _ = fed.sample_round(psl, params, data, rk, B)
+    flat_dense = jnp.concatenate([x.ravel()
+                                  for x in jax.tree.leaves(g_dense)])
+
+    @jax.jit
+    def one(dk):
+        g, _, _ = fed.sample_round(psl, params, data, rk, B, dp=dp, dp_key=dk)
+        return jnp.concatenate([x.ravel() for x in jax.tree.leaves(g)])
+
+    R = 64
+    acc = jnp.zeros_like(flat_dense)
+    for r in range(R):
+        acc = acc + one(jax.random.fold_in(jax.random.PRNGKey(9), r))
+    diff = acc / R - flat_dense
+    # per-coordinate std of the averaged aggregate noise
+    sigma_agg = (privacy.noise_multiplier(dp) * dp.clip_norm
+                 * math.sqrt(float(jnp.sum(
+                     (data.counts / data.total) ** 2))) / math.sqrt(R))
+    assert float(jnp.max(jnp.abs(diff))) < 5 * sigma_agg
+
+
+@pytest.mark.parametrize("codec_name", [None, "int8"])
+def test_dp_trajectory_dense_matches_cohort(codec_name):
+    data = _data(jax.random.PRNGKey(0))
+    fl = _fl()
+    params0 = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
+    codec = make_codec(codec_name)
+    kw = dict(participation=S, dp=dp, codec=codec)
+    rd = algorithms.algorithm1(psl, params0, data, fl, 5,
+                               jax.random.PRNGKey(3), **kw)
+    rc = algorithms.algorithm1(psl, params0, data, fl, 5,
+                               jax.random.PRNGKey(3), cohort=True, **kw)
+    _assert_trees_close(rd.params, rc.params, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rd.history["round_dp_epsilon"]),
+                               np.asarray(rc.history["round_dp_epsilon"]),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("codec_name", [None, "int8"])
+def test_dp_trajectory_local_matches_sharded(codec_name):
+    data = _data(jax.random.PRNGKey(0))
+    fl = _fl()
+    params0 = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
+    kw = dict(dp=dp, codec=make_codec(codec_name))
+    rl = algorithms.algorithm1(psl, params0, data, fl, 5,
+                               jax.random.PRNGKey(3), **kw)
+    rs = algorithms.algorithm1(psl, params0, data, fl, 5,
+                               jax.random.PRNGKey(3),
+                               topology=sharded_for(I), **kw)
+    _assert_trees_close(rl.params, rs.params, atol=1e-5)
+
+
+def test_dp_feature_round_local_matches_sharded():
+    z = jax.random.normal(jax.random.PRNGKey(0), (240, 16))
+    lab = jax.random.randint(jax.random.PRNGKey(1), (240,), 0, L)
+    data = fed.partition_features(z, jax.nn.one_hot(lab, L), 4)
+    params = {"w0": jax.random.normal(jax.random.PRNGKey(2), (L, J)) * 0.2,
+              "blocks": jax.random.normal(jax.random.PRNGKey(3),
+                                          (4, J, 4)) * 0.2}
+    dp = privacy.DPConfig(clip_norm=2.0, epsilon=4.0, delta=DELTA)
+    codec = make_codec("int8")
+    ef = {"w0": ef_init(tree_flat_dim(params["w0"])),
+          "blocks": ef_init_stacked(4, tree_flat_dim(params["blocks"],
+                                                     stacked=True))}
+    args = (params, data, jax.random.PRNGKey(4), B,
+            mlp.per_sample_loss_from_h, mlp.client_h)
+    gl, _, upl = fed.feature_round(*args, codec=codec, ef=ef, dp=dp)
+    gs, _, ups = fed.feature_round(*args, codec=codec, ef=ef, dp=dp,
+                                   topology=feature_sharded_for(4))
+    _assert_trees_close(gl, gs, atol=1e-5)
+    for k in ("head_clipped", "blocks_clipped"):
+        np.testing.assert_allclose(np.asarray(upl["dp"][k]),
+                                   np.asarray(ups["dp"][k]))
+
+
+def test_clip_fraction_metric_matches_from_scratch_norms():
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    rk = jax.random.PRNGKey(6)
+    # per-client mean-gradient norms from the UN-noised round
+    _, _, up0 = fed.sample_round(psl, params, data, rk, B)
+    sums = up0["q_grad_sums"]           # stacked per-client q pytree
+    flat = jnp.concatenate(
+        [x.reshape(I, -1) for x in jax.tree.leaves(sums)], axis=1)
+    b_i = jnp.minimum(data.counts, B).astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(flat / b_i[:, None]), axis=1))
+    clip = float(jnp.median(norms))     # binds for about half the clients
+    dp = privacy.DPConfig(clip_norm=clip, epsilon=8.0, delta=DELTA)
+    _, _, up = fed.sample_round(psl, params, data, rk, B, dp=dp)
+    expected = (np.asarray(norms) > clip).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(up["dp"]["clipped"]), expected)
+    assert 0.0 < expected.mean() < 1.0  # the clip genuinely splits clients
+
+
+def test_driver_epsilon_is_accountant_not_naive_composition():
+    # 2 rounds at S-of-I participation: the streamed ε must equal the
+    # hand-computed subsampled-RDP composition — and NOT 2× the
+    # single-release ε (naive per-round composition)
+    data = _data(jax.random.PRNGKey(0))
+    fl = _fl()
+    params0 = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
+    res = algorithms.algorithm1(psl, params0, data, fl, 2,
+                                jax.random.PRNGKey(3), participation=S,
+                                dp=dp)
+    q, sigma = S / I, privacy.noise_multiplier(dp)
+
+    def rdp_one(a):
+        s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                * math.exp(k * (k - 1) / (2.0 * sigma ** 2))
+                for k in range(a + 1))
+        return math.log(s) / (a - 1)
+
+    # hand computation over small orders only (comb/exp stay exact there);
+    # the accountant's wider grid can only find a smaller min, so allow it
+    hand = min(2.0 * rdp_one(a) + math.log(1.0 / DELTA) / (a - 1)
+               for a in range(2, 33))
+    got = float(np.asarray(res.history["round_dp_epsilon"])[-1])
+    assert got == pytest.approx(hand, rel=1e-4)
+    assert got < 2 * dp.epsilon        # tighter than naive ε-per-release × K
+
+
+def test_deprecated_dp_sample_round_warns_and_delegates():
+    data = _data(jax.random.PRNGKey(0))
+    params = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
+    rk = jax.random.PRNGKey(7)
+    with pytest.warns(DeprecationWarning, match="dp_sample_round"):
+        g_old, q_old = privacy.dp_sample_round(psl, params, data, rk, B, dp)
+    g_new, _, up = fed.sample_round(psl, params, data, rk, B, dp=dp)
+    _assert_trees_close(g_old, g_new, rtol=1e-6, atol=1e-7)
+    _assert_trees_close(q_old, up["q_grad_sums"], rtol=1e-6, atol=1e-7)
+
+
+def test_cohort_efstore_dp_composition_runs():
+    # cohort engine + EFStore + int8 + DP in one driver call (the full
+    # stack); 3 rounds must produce finite params and a noised trajectory
+    data = _data(jax.random.PRNGKey(0))
+    fl = _fl()
+    params0 = _params0(jax.random.PRNGKey(1))
+    dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
+    r = algorithms.algorithm1(psl, params0, data, fl, 3,
+                              jax.random.PRNGKey(3), participation=S,
+                              cohort=True, codec=make_codec("int8"), dp=dp)
+    for x in jax.tree.leaves(r.params):
+        assert np.isfinite(np.asarray(x)).all()
+    r0 = algorithms.algorithm1(psl, params0, data, fl, 3,
+                               jax.random.PRNGKey(3), participation=S,
+                               cohort=True, codec=make_codec("int8"))
+    # the noise must actually change the trajectory
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+             zip(jax.tree.leaves(r.params), jax.tree.leaves(r0.params))]
+    assert max(diffs) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint dtype gate (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_dtype_mismatch_raises(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    path = str(tmp_path / "ck.msgpack")
+    # build the f64 leaves in numpy — jnp would silently downcast them
+    # before they ever hit the file (x64 is disabled in tests)
+    save_checkpoint(path, {"w": np.ones((3,), np.float64)}, step=3)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        load_checkpoint(path, {"w": jnp.ones((3,), jnp.float32)})
+
+
+def test_checkpoint_cast_true_converts(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, {"w": np.arange(3, dtype=np.float64) * 0.5}, step=3)
+    tree, step = load_checkpoint(path, {"w": jnp.ones((3,), jnp.float32)},
+                                 cast=True)
+    assert step == 3
+    assert tree["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(tree["w"]), [0.0, 0.5, 1.0])
+
+
+def test_checkpoint_matching_dtypes_load_without_cast(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    path = str(tmp_path / "ck.msgpack")
+    tree0 = {"w": np.ones((2, 2), np.float32), "n": np.int32(4)}
+    save_checkpoint(path, tree0, step=1)
+    tree, _ = load_checkpoint(path, tree0)
+    np.testing.assert_array_equal(np.asarray(tree["w"]), tree0["w"])
