@@ -30,13 +30,13 @@ def kernel_microbench():
     f = jax.jit(lambda a, b: ref.rmsnorm_ref(a, b))
     print(f"kern.rmsnorm.512x2048,{_time(f, x, sc):.0f},ref_cpu", flush=True)
 
-    w = jax.random.normal(key, (1 << 20,))
+    w = jax.random.normal(jax.random.fold_in(key, 4), (1 << 20,))
     buf = jnp.zeros((1 << 20,))
     g = jax.random.normal(jax.random.fold_in(key, 1), (1 << 20,))
     f = jax.jit(lambda a, b, c: ref.ssca_update_ref(a, b, c, 0.5, 0.3, 0.2, 1e-5))
     print(f"kern.ssca_update.1M,{_time(f, w, buf, g):.0f},ref_cpu", flush=True)
 
-    q = jax.random.normal(key, (1, 8, 512, 64))
+    q = jax.random.normal(jax.random.fold_in(key, 5), (1, 8, 512, 64))
     k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 64))
     v = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 512, 64))
     f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))

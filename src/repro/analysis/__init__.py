@@ -1,0 +1,24 @@
+"""Static analysis for the federated SSCA stack.
+
+Two layers (DESIGN.md §16):
+
+* :mod:`repro.analysis.lint` — an AST linter (rule codes ``FLT001`` …
+  ``FLT006``) over ``src/`` and ``benchmarks/`` that statically enforces
+  hot-path hygiene: no host syncs or host entropy reachable from a jitted
+  scope, no PRNG key reuse, no deprecated shims, no silent dtype
+  promotion in kernel/codec code, no non-pytree scan carries.
+* :mod:`repro.analysis.contracts` — jaxpr contract checkers that trace
+  the *compiled* round step over the full config matrix (dense/cohort ×
+  local/sharded × identity/int8+EF × dp on/off) and assert structural
+  properties the compiler cannot: scan-body purity, DP-before-encode
+  ordering, collective axes ⊆ mesh axes, wire dtypes == codec spec.
+* :mod:`repro.analysis.retrace` — a recompile sentinel wrapping
+  ``rounds._scan_jit`` that fails if a config traces more than once per
+  process.
+
+CLI: ``python -m repro.analysis [--format json] [paths...]``.
+"""
+
+from repro.analysis.lint import Finding, LintResult, lint_paths
+
+__all__ = ["Finding", "LintResult", "lint_paths"]

@@ -1,0 +1,95 @@
+"""CLI for the static-analysis pass.
+
+``python -m repro.analysis``             lint src/repro + benchmarks, then run
+                                         the jaxpr contract matrix + retrace
+                                         sentinel (full CI gate; exit != 0 on
+                                         any finding or contract violation).
+``python -m repro.analysis PATH...``     lint only the given files/dirs (no
+                                         contract matrix — used for fixtures).
+``--format json [-o FILE]``              machine-readable report.
+``--no-contracts`` / ``--only-contracts``  select a single layer.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import lint_paths
+
+
+def _default_paths(root: Path) -> list[Path]:
+    paths = [root / "src" / "repro"]
+    bench = root / "benchmarks"
+    if bench.is_dir():
+        paths.append(bench)
+    return paths
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="FLT lints + jaxpr contract checkers for the SSCA stack")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files/dirs to lint (default: src/repro + benchmarks, "
+                             "plus the contract matrix)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("-o", "--output", type=Path, default=None,
+                        help="write the report to FILE instead of stdout")
+    parser.add_argument("--no-contracts", action="store_true",
+                        help="skip the jaxpr contract matrix")
+    parser.add_argument("--only-contracts", action="store_true",
+                        help="run only the jaxpr contract matrix")
+    parser.add_argument("--root", type=Path, default=None,
+                        help="repo root (default: discovered from paths)")
+    args = parser.parse_args(argv)
+
+    explicit_paths = bool(args.paths)
+    root = args.root or Path(__file__).resolve().parents[3]
+    paths = args.paths or _default_paths(root)
+
+    report: dict = {"tool": "repro.analysis", "lint": None, "contracts": None,
+                    "retrace": None}
+    exit_code = 0
+
+    if not args.only_contracts:
+        result = lint_paths(paths, root=root)
+        report["lint"] = json.loads(result.to_json())
+        exit_code = max(exit_code, result.exit_code)
+        if args.format == "text":
+            _emit(result.render_text(), args.output, append=False)
+
+    run_contracts = (args.only_contracts
+                     or (not explicit_paths and not args.no_contracts))
+    if run_contracts:
+        from repro.analysis.contracts import run_matrix
+        from repro.analysis.retrace import RetraceSentinel
+
+        with RetraceSentinel() as sentinel:
+            contract_report = run_matrix()
+        report["contracts"] = contract_report.to_dict()
+        report["retrace"] = sentinel.report()
+        exit_code = max(exit_code, 0 if contract_report.ok else 1)
+        exit_code = max(exit_code, 0 if sentinel.ok else 1)
+        if args.format == "text":
+            _emit(contract_report.render_text(), args.output, append=True)
+            _emit(sentinel.render_text(), args.output, append=True)
+
+    if args.format == "json":
+        _emit(json.dumps(report, indent=2), args.output, append=False)
+    return exit_code
+
+
+def _emit(text: str, output: Path | None, append: bool) -> None:
+    if output is None:
+        print(text)
+    else:
+        mode = "a" if append and output.exists() else "w"
+        with open(output, mode) as fh:
+            fh.write(text + "\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

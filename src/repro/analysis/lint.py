@@ -1,0 +1,403 @@
+"""AST lint engine with project-wide jit-reachability.
+
+The linter parses every Python file under the requested paths into a
+:class:`Project`: per-module import tables, an index of every function
+and lambda (keyed by dotted qualname), and a call graph.  Scopes passed
+to a jit entry point (``jax.jit``, ``lax.scan``, ``vmap``, ``shard_map``,
+``with_comm_carry``, ``Topology.weighted_sum`` fn-args, …) become
+*roots*; reachability is the fixpoint closure of the call graph from
+those roots, with host-boundary escapes (``io_callback`` /
+``pure_callback`` / ``debug_callback`` / thread targets) explicitly
+excluded so registered host taps are never treated as device code.
+
+Rules (``repro.analysis.rules``) receive each module plus the project
+and yield :class:`Finding`s.  Per-line suppression::
+
+    x.item()  # flint: disable=FLT001
+    anything  # flint: disable        (all rules on this line)
+
+Reports render as text (``path:line:col CODE message``) or JSON.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+# Final attribute names whose function-valued call arguments enter a
+# traced/jitted scope.  Includes the repo's own hot-path entry points:
+# ``with_comm_carry`` wraps the body it is given into the scanned step,
+# ``scoped`` wraps it in a named_scope inside the scan, and the
+# Topology aggregation methods vmap/shard_map their client function.
+JIT_ENTRY_NAMES = frozenset({
+    "jit", "pjit", "vmap", "pmap", "grad", "value_and_grad", "vjp", "jvp",
+    "scan", "while_loop", "fori_loop", "cond", "switch", "associative_scan",
+    "checkpoint", "remat", "custom_vjp", "custom_jvp", "shard_map",
+    "make_jaxpr", "eval_shape", "pallas_call", "named_call",
+    # repo-specific entries
+    "with_comm_carry", "scoped", "weighted_sum", "feature_sum",
+})
+
+# Calls whose function-valued arguments run on the *host*, not in the
+# traced program: passing a fn here must not mark it jit-reachable.
+HOST_BOUNDARY_NAMES = frozenset({
+    "io_callback", "pure_callback", "debug_callback", "callback", "Thread",
+})
+
+_SUPPRESS_RE = re.compile(r"#\s*flint:\s*disable(?:=([A-Za-z0-9_,\s]+))?")
+# file-level marker (first 10 lines): `# flint: scope=kernel` opts a module
+# outside repro.kernels/repro.comm into the strict kernel/codec dtype rules
+_SCOPE_RE = re.compile(r"#\s*flint:\s*scope=(\w+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col} {self.code} {self.message}"
+
+
+@dataclasses.dataclass
+class Scope:
+    """One function/lambda body, the unit of jit-reachability."""
+
+    qualname: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    module: "Module"
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.module.name, self.qualname)
+
+    def own_nodes(self) -> Iterator[ast.AST]:
+        """Walk this scope's body, excluding nested function/lambda bodies."""
+        body = self.node.body if isinstance(self.node.body, list) else [self.node.body]
+        stack: list[ast.AST] = list(body)
+        while stack:
+            node = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    yield child  # the def executes here; its body is a separate scope
+                    continue
+                stack.append(child)
+
+
+class Module:
+    def __init__(self, path: Path, name: str, source: str):
+        self.path = path
+        self.name = name
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.lines = source.splitlines()
+        # alias -> fully dotted target ("jnp" -> "jax.numpy",
+        # "fed" -> "repro.core.fed", "sample_round" -> "repro.core.fed.sample_round")
+        self.imports: dict[str, str] = {}
+        self.scopes: dict[str, Scope] = {}
+        # qualname of the scope lexically enclosing each scope ("" = module)
+        self.scope_parent: dict[str, str] = {}
+        # method name -> [qualname] for name-based virtual dispatch
+        self.methods: dict[str, list[str]] = {}
+        self.suppressions = self._parse_suppressions()
+        self.scope_marker = next(
+            (m.group(1) for line in self.lines[:10]
+             if (m := _SCOPE_RE.search(line))), None)
+        self._index()
+
+    def _parse_suppressions(self) -> dict[int, frozenset[str] | None]:
+        out: dict[int, frozenset[str] | None] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                codes = m.group(1)
+                out[i] = frozenset(c.strip().upper() for c in codes.split(",") if c.strip()) if codes else None
+        return out
+
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.imports[a.asname] = a.name
+                    else:
+                        top = a.name.split(".")[0]
+                        self.imports[top] = top
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for a in node.names:
+                    if a.name != "*":
+                        self.imports[a.asname or a.name] = f"{node.module}.{a.name}"
+
+        def visit(node: ast.AST, prefix: str, in_class: str | None) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qn = f"{prefix}{child.name}"
+                    self.scopes[qn] = Scope(qn, child, self)
+                    self.scope_parent[qn] = prefix[:-1] if prefix else ""
+                    if in_class:
+                        self.methods.setdefault(child.name, []).append(qn)
+                    visit(child, f"{qn}.", None)
+                elif isinstance(child, ast.Lambda):
+                    qn = f"{prefix}<lambda@{child.lineno}:{child.col_offset}>"
+                    self.scopes[qn] = Scope(qn, child, self)
+                    self.scope_parent[qn] = prefix[:-1] if prefix else ""
+                    visit(child, f"{qn}.", None)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{child.name}.", child.name)
+                else:
+                    visit(child, prefix, in_class)
+
+        visit(self.tree, "", None)
+        # map every AST node id to its innermost enclosing scope qualname
+        self.node_scope: dict[int, str] = {}
+        for qn, scope in self.scopes.items():
+            for n in scope.own_nodes():
+                self.node_scope[id(n)] = qn
+
+    def enclosing_scope(self, node: ast.AST) -> str:
+        return self.node_scope.get(id(node), "")
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """Resolve a Name/Attribute expression to a fully dotted path."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.imports.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+    def is_suppressed(self, line: int, code: str) -> bool:
+        codes = self.suppressions.get(line, False)
+        if codes is False:
+            return False
+        return codes is None or code.upper() in codes
+
+
+class Project:
+    """All linted modules plus the jit-reachability fixpoint."""
+
+    def __init__(self, files: list[Path], root: Path):
+        self.root = root
+        self.modules: dict[str, Module] = {}
+        self.errors: list[Finding] = []
+        for f in files:
+            name = _module_name(f, root)
+            try:
+                self.modules[name] = Module(f, name, f.read_text())
+            except SyntaxError as e:
+                self.errors.append(Finding(str(f), e.lineno or 0, e.offset or 0,
+                                           "FLT000", f"syntax error: {e.msg}"))
+        self.methods: dict[str, list[tuple[str, str]]] = {}
+        for mod in self.modules.values():
+            for mname, qns in mod.methods.items():
+                self.methods.setdefault(mname, []).extend((mod.name, q) for q in qns)
+        self.reachable: set[tuple[str, str]] = set()
+        self._compute_reachability()
+
+    # -- resolution ------------------------------------------------------
+
+    def resolve_function(self, expr: ast.AST, module: Module, scope_qn: str
+                         ) -> list[tuple[str, str]]:
+        """Resolve a function-valued expression to candidate scope keys."""
+        if isinstance(expr, ast.Lambda):
+            qn = f"<lambda@{expr.lineno}:{expr.col_offset}>"
+            for cand, sc in module.scopes.items():
+                if sc.node is expr:
+                    return [(module.name, cand)]
+            return []
+        if isinstance(expr, ast.Name):
+            # lexical lookup: nested defs of enclosing scopes, then module level
+            chain = []
+            cur = scope_qn
+            while cur:
+                chain.append(cur)
+                cur = module.scope_parent.get(cur, "")
+            for outer in chain:
+                cand = f"{outer}.{expr.id}"
+                if cand in module.scopes:
+                    return [(module.name, cand)]
+            if expr.id in module.scopes:
+                return [(module.name, expr.id)]
+            target = module.imports.get(expr.id)
+            if target:
+                mod_name, _, fn = target.rpartition(".")
+                if mod_name in self.modules and fn in self.modules[mod_name].scopes:
+                    return [(mod_name, fn)]
+            return []
+        if isinstance(expr, ast.Attribute):
+            dotted = module.dotted(expr)
+            if dotted:
+                mod_name, _, fn = dotted.rpartition(".")
+                if mod_name in self.modules and fn in self.modules[mod_name].scopes:
+                    return [(mod_name, fn)]
+            # virtual dispatch by method name (topo.weighted_sum, codec.encode, …)
+            if expr.attr in self.methods:
+                return list(self.methods[expr.attr])
+        return []
+
+    # -- reachability ----------------------------------------------------
+
+    def _compute_reachability(self) -> None:
+        roots: set[tuple[str, str]] = set()
+        # edges computed lazily per reachable scope
+        for mod in self.modules.values():
+            for node in ast.walk(mod.tree):
+                # decorator roots: @jax.jit / @partial(jax.jit, ...)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        target = dec.func if isinstance(dec, ast.Call) else dec
+                        name = _final_name(target)
+                        if name in JIT_ENTRY_NAMES or (
+                            isinstance(dec, ast.Call)
+                            and any(_final_name(a) in JIT_ENTRY_NAMES for a in dec.args)
+                        ):
+                            scope_qn = mod.enclosing_scope(node)
+                            qn = f"{scope_qn}.{node.name}" if scope_qn else node.name
+                            if qn in mod.scopes:
+                                roots.add((mod.name, qn))
+                if isinstance(node, ast.Call):
+                    name = _final_name(node.func)
+                    if name in JIT_ENTRY_NAMES:
+                        scope_qn = mod.enclosing_scope(node)
+                        for arg in list(node.args) + [k.value for k in node.keywords]:
+                            for key in self.resolve_function(arg, mod, scope_qn):
+                                roots.add(key)
+
+        self.reachable = set(roots)
+        work = list(roots)
+        while work:
+            mod_name, qn = work.pop()
+            mod = self.modules.get(mod_name)
+            if mod is None or qn not in mod.scopes:
+                continue
+            scope = mod.scopes[qn]
+            new: set[tuple[str, str]] = set()
+            for node in scope.own_nodes():
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _final_name(node.func)
+                if name in HOST_BOUNDARY_NAMES:
+                    continue
+                new.update(self.resolve_function(node.func, mod, qn))
+                # fn-valued args passed onward from a reachable scope
+                # (e.g. client fn handed to topo.weighted_sum)
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    new.update(self.resolve_function(arg, mod, qn))
+            # nested scopes called by name resolve above; lambdas defined
+            # inline in non-call positions stay unreachable, correctly
+            for key in new:
+                if key not in self.reachable:
+                    self.reachable.add(key)
+                    work.append(key)
+
+    def is_reachable(self, module: Module, qualname: str) -> bool:
+        return (module.name, qualname) in self.reachable
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    files_checked: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "files_checked": self.files_checked,
+            "num_findings": len(self.findings),
+            "num_suppressed": len(self.suppressed),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }, indent=2)
+
+    def render_text(self) -> str:
+        lines = [f.render() for f in self.findings]
+        lines.append(f"{len(self.findings)} finding(s), "
+                     f"{len(self.suppressed)} suppressed, "
+                     f"{self.files_checked} file(s) checked")
+        return "\n".join(lines)
+
+
+def _final_name(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _module_name(path: Path, root: Path) -> str:
+    try:
+        rel = path.resolve().relative_to(root.resolve())
+    except ValueError:
+        return path.stem
+    parts = list(rel.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) or path.stem
+
+
+def discover_files(paths: Iterable[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(f for f in p.rglob("*.py") if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_paths(paths: Iterable[Path], root: Path | None = None,
+               rules: Iterable | None = None) -> LintResult:
+    """Lint the given files/directories; returns findings + suppressions."""
+    from repro.analysis.rules import ALL_RULES
+
+    paths = [Path(p) for p in paths]
+    root = Path(root) if root is not None else _find_repo_root(paths)
+    files = discover_files(paths)
+    project = Project(files, root)
+    active_rules = list(rules) if rules is not None else [r() for r in ALL_RULES]
+
+    findings: list[Finding] = list(project.errors)
+    suppressed: list[Finding] = []
+    for mod in project.modules.values():
+        for rule in active_rules:
+            for f in rule.check_module(mod, project):
+                if mod.is_suppressed(f.line, f.code):
+                    suppressed.append(dataclasses.replace(f, suppressed=True))
+                else:
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return LintResult(findings, suppressed, len(files))
+
+
+def _find_repo_root(paths: list[Path]) -> Path:
+    for p in paths:
+        cur = p.resolve()
+        if cur.is_file():
+            cur = cur.parent
+        while cur != cur.parent:
+            if (cur / "pyproject.toml").exists() or (cur / ".git").exists():
+                return cur
+            cur = cur.parent
+    return Path.cwd()

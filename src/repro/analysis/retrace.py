@@ -1,0 +1,97 @@
+"""Recompile sentinel for the scan-compiled round drivers.
+
+``rounds.scan_rounds`` / ``loop_rounds`` cache one jitted callable per
+step-function identity; a config that triggers a *second* trace of the
+same callable (shape/dtype/pytree instability across calls, a weakly
+typed scalar flipping, a donated buffer changing layout) silently pays
+full compile latency every run — the exact regression PR 5's telemetry
+can only see after the fact.  The sentinel wraps ``rounds._scan_jit`` /
+``rounds._step_jit``, records every jitted callable they hand out, and
+fails if any of them reports more than ``limit`` compilations
+(``jax.jit``'s ``_cache_size``) while the sentinel is active.
+
+Usage::
+
+    with RetraceSentinel() as sentinel:
+        run_configs()
+    assert sentinel.ok, sentinel.render_text()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import rounds
+
+
+@dataclasses.dataclass
+class RetraceViolation:
+    kind: str       # "scan" | "step"
+    compiles: int
+    limit: int
+
+    def render(self) -> str:
+        return (f"retrace: {self.kind}-jit compiled {self.compiles}x "
+                f"(limit {self.limit}) — per-config shapes/dtypes must be "
+                "stable so one config costs one compile")
+
+
+class RetraceSentinel:
+    """Context manager that fails if any round-driver jit retraces."""
+
+    def __init__(self, limit: int = 1):
+        self.limit = limit
+        self._tracked: list[tuple[str, object]] = []
+        self._orig: dict[str, object] = {}
+        self.violations: list[RetraceViolation] = []
+
+    def __enter__(self) -> "RetraceSentinel":
+        self._orig = {"_scan_jit": rounds._scan_jit,
+                      "_step_jit": rounds._step_jit}
+
+        def wrap(orig, kind):
+            def wrapped(step_fn):
+                fn = orig(step_fn)
+                if not any(f is fn for _, f in self._tracked):
+                    # baseline: entries may arrive pre-compiled from earlier
+                    # use of the same step closure in this process
+                    self._tracked.append((kind, fn))
+                return fn
+            return wrapped
+
+        rounds._scan_jit = wrap(self._orig["_scan_jit"], "scan")
+        rounds._step_jit = wrap(self._orig["_step_jit"], "step")
+        return self
+
+    def __exit__(self, *exc) -> None:
+        rounds._scan_jit = self._orig["_scan_jit"]
+        rounds._step_jit = self._orig["_step_jit"]
+        self.check()
+
+    def check(self) -> None:
+        self.violations = [
+            RetraceViolation(kind, n, self.limit)
+            for kind, fn in self._tracked
+            if (n := _cache_size(fn)) > self.limit
+        ]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def report(self) -> dict:
+        return {"tracked": len(self._tracked),
+                "limit": self.limit,
+                "ok": self.ok,
+                "violations": [dataclasses.asdict(v) for v in self.violations]}
+
+    def render_text(self) -> str:
+        lines = [v.render() for v in self.violations]
+        lines.append(f"retrace sentinel: {len(self._tracked)} jit(s) tracked, "
+                     f"{len(self.violations)} violation(s)")
+        return "\n".join(lines)
+
+
+def _cache_size(fn) -> int:
+    size = getattr(fn, "_cache_size", None)
+    return size() if callable(size) else 0

@@ -1,0 +1,28 @@
+"""Rule registry for the FLT lint pass.
+
+Each rule is a class with a ``code``, a ``name``, and a
+``check_module(module, project) -> Iterable[Finding]`` method.  To add a
+rule: create ``rules/fltNNN_<slug>.py``, subclass nothing (duck-typed),
+append it to ``ALL_RULES``, document it in DESIGN.md §16, and commit a
+bad/clean fixture pair under ``tests/fixtures/analysis/``.
+"""
+
+from repro.analysis.rules.flt001_host_sync import HostSyncRule
+from repro.analysis.rules.flt002_prng import PRNGReuseRule
+from repro.analysis.rules.flt003_host_entropy import HostEntropyRule
+from repro.analysis.rules.flt004_deprecated import DeprecatedShimRule
+from repro.analysis.rules.flt005_dtype import DtypePromotionRule
+from repro.analysis.rules.flt006_carry import CarryHygieneRule
+
+ALL_RULES = [
+    HostSyncRule,
+    PRNGReuseRule,
+    HostEntropyRule,
+    DeprecatedShimRule,
+    DtypePromotionRule,
+    CarryHygieneRule,
+]
+
+RULES_BY_CODE = {r.code: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_CODE"]

@@ -1,0 +1,73 @@
+"""FLT001 — host-sync ops reachable from a jitted/scanned scope.
+
+A ``.item()`` / ``.tolist()`` / ``np.*`` / ``jax.device_get`` call, or a
+``float()``/``int()``/``bool()`` of a traced value, inside a scope that
+is reachable from a jit entry forces a device→host transfer at trace
+time (or a concretization error), serializing the scan dispatch that
+PR 5 measured at 3–4% per stray effect.  Host-side code (benchmark
+timing loops, obs sinks, accountants) is *not* flagged: reachability is
+computed from actual jit entries, and callback-registered functions are
+host code by construction.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import Finding, Module, Project
+
+_SYNC_METHODS = {"item", "tolist"}
+_CASTS = {"float", "int", "bool", "complex"}
+
+
+def _mentions_traced_value(node: ast.AST, module: Module) -> bool:
+    """True if the expression contains a jax/jnp-rooted call or name."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            target = module.imports.get(sub.id, "")
+            if target == "jax" or target.startswith(("jax.", "jax.numpy")):
+                return True
+    return False
+
+
+class HostSyncRule:
+    code = "FLT001"
+    name = "host-sync-in-jit"
+
+    def check_module(self, module: Module, project: Project) -> Iterable[Finding]:
+        path = str(module.path)
+        for qualname, scope in module.scopes.items():
+            if not project.is_reachable(module, qualname):
+                continue
+            for node in scope.own_nodes():
+                if not isinstance(node, ast.Call):
+                    continue
+                # x.item() / x.tolist()
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SYNC_METHODS
+                        and not node.args):
+                    yield Finding(path, node.lineno, node.col_offset, self.code,
+                                  f".{node.func.attr}() forces a device->host sync "
+                                  f"inside jit-reachable scope '{qualname}'; keep the "
+                                  "value traced or move the readout behind the scan")
+                    continue
+                dotted = module.dotted(node.func)
+                if dotted is None:
+                    # float(jnp.max(x)) — concretizes a tracer
+                    continue
+                root = dotted.split(".")[0]
+                if root == "numpy" or module.imports.get(root, "") == "numpy":
+                    yield Finding(path, node.lineno, node.col_offset, self.code,
+                                  f"numpy call '{dotted}' inside jit-reachable scope "
+                                  f"'{qualname}' materializes on host; use jnp")
+                elif dotted in ("jax.device_get", "jax.block_until_ready"):
+                    yield Finding(path, node.lineno, node.col_offset, self.code,
+                                  f"'{dotted}' inside jit-reachable scope "
+                                  f"'{qualname}' is a host sync")
+                elif (dotted in _CASTS and node.args
+                      and _mentions_traced_value(node.args[0], module)):
+                    yield Finding(path, node.lineno, node.col_offset, self.code,
+                                  f"{dotted}() of a traced value inside jit-reachable "
+                                  f"scope '{qualname}' concretizes the tracer; use "
+                                  "jnp casts or keep it an array")

@@ -1,0 +1,43 @@
+"""FLT003 — Python-side entropy/clock use in jitted scopes.
+
+``random.*``, ``time.*``, ``datetime.*``, ``secrets.*`` inside a
+jit-reachable scope bake a single host-side draw/timestamp into the
+traced program as a constant: the "randomness" is frozen at trace time
+and every scanned round replays it.  Host-side orchestration (benchmark
+timing, manifests) is legitimately host code and is not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import Finding, Module, Project
+
+_HOST_ENTROPY_MODULES = {"random", "time", "datetime", "secrets"}
+
+
+class HostEntropyRule:
+    code = "FLT003"
+    name = "host-entropy-in-jit"
+
+    def check_module(self, module: Module, project: Project) -> Iterable[Finding]:
+        path = str(module.path)
+        for qualname, scope in module.scopes.items():
+            if not project.is_reachable(module, qualname):
+                continue
+            for node in scope.own_nodes():
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = module.dotted(node.func)
+                if not dotted:
+                    continue
+                root = dotted.split(".")[0]
+                imported = any(v == root or v.startswith(root + ".")
+                               for v in module.imports.values())
+                if root in _HOST_ENTROPY_MODULES and imported:
+                    yield Finding(
+                        path, node.lineno, node.col_offset, self.code,
+                        f"host call '{dotted}' in jit-reachable scope '{qualname}' "
+                        "is frozen into the trace as a constant; use jax.random "
+                        "keys / traced round indices instead")

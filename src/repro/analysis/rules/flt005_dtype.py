@@ -1,0 +1,67 @@
+"""FLT005 — f64 literals and silent dtype promotion in kernel/codec code.
+
+Scoped to ``repro.kernels`` and ``repro.comm``: the wire formats and
+Pallas kernels pin exact dtypes (int8 values + f32 scales, f32 topk +
+int32 indices), so a ``float64`` mention or a dtype-less array
+constructor (``jnp.zeros(n)`` / ``jnp.arange(n)`` default to the
+x64-flag-dependent dtype) silently widens a buffer, breaks bit-equal
+wire assertions across hosts, and doubles bytes-on-wire.  Host-side
+high-precision math (e.g. the RDP accountant's ``np.float64``) lives
+outside these prefixes and is deliberately out of scope.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import Finding, Module, Project
+
+_STRICT_PREFIXES = ("repro.kernels", "repro.comm")
+_CTORS_NEED_DTYPE = {"zeros", "ones", "full", "empty", "arange", "linspace",
+                     "eye", "identity"}
+_F64_NAMES = {"float64", "double", "f64", "complex128"}
+
+
+class DtypePromotionRule:
+    code = "FLT005"
+    name = "dtype-promotion"
+
+    def check_module(self, module: Module, project: Project) -> Iterable[Finding]:
+        if not (module.name.startswith(_STRICT_PREFIXES)
+                or module.scope_marker == "kernel"):
+            return
+        path = str(module.path)
+        for node in ast.walk(module.tree):
+            # float64 mentions: jnp.float64 / np.float64 / dtype="float64"
+            if isinstance(node, ast.Attribute) and node.attr in _F64_NAMES:
+                dotted = module.dotted(node)
+                if dotted and dotted.split(".")[0] in ("jax", "numpy"):
+                    yield Finding(path, node.lineno, node.col_offset, self.code,
+                                  f"'{dotted}' in kernel/codec code: the stack is "
+                                  "pinned to f32/int8 wire dtypes; f64 doubles "
+                                  "bytes-on-wire and breaks bit-equal wire "
+                                  "assertions")
+            elif (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                  and node.value in _F64_NAMES):
+                yield Finding(path, node.lineno, node.col_offset, self.code,
+                              f"dtype string '{node.value}': the stack is pinned to "
+                              "f32/int8 wire dtypes")
+            elif isinstance(node, ast.Call):
+                name = node.func.attr if isinstance(node.func, ast.Attribute) else None
+                if name in _CTORS_NEED_DTYPE:
+                    dotted = module.dotted(node.func)
+                    if not dotted or dotted.split(".")[0] not in ("jax", "numpy"):
+                        continue
+                    # dtype may be the last positional arg or a keyword
+                    has_dtype = any(k.arg == "dtype" for k in node.keywords)
+                    npos = {"zeros": 2, "ones": 2, "full": 3, "empty": 2,
+                            "eye": 2, "identity": 2}.get(name)
+                    if npos is not None and len(node.args) >= npos:
+                        has_dtype = True
+                    if not has_dtype:
+                        yield Finding(
+                            path, node.lineno, node.col_offset, self.code,
+                            f"'{dotted}' without an explicit dtype in kernel/codec "
+                            "code silently takes the default (weak) dtype; pin it "
+                            "(e.g. jnp.float32) so wire buffers stay bit-stable")

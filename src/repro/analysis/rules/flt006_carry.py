@@ -1,0 +1,59 @@
+"""FLT006 — mutable default args and non-pytree state in scan carries.
+
+A mutable default (``def f(x, acc=[])``) is shared across calls — in a
+traced context it leaks tracers between traces and poisons the jit
+cache.  A ``lax.scan`` carry containing a ``set`` / generator /
+comprehension-of-set is not a pytree and fails at trace time with an
+opaque leaf error; flagging the init expression points at the real
+culprit.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import Finding, Module, Project
+
+_IMMUTABLE_CTOR_NAMES = {"tuple", "frozenset", "namedtuple", "partial",
+                         "MappingProxyType"}
+_NON_PYTREE = (ast.Set, ast.SetComp, ast.GeneratorExp)
+
+
+class CarryHygieneRule:
+    code = "FLT006"
+    name = "carry-hygiene"
+
+    def check_module(self, module: Module, project: Project) -> Iterable[Finding]:
+        path = str(module.path)
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                args = node.args
+                for default in list(args.defaults) + [d for d in args.kw_defaults if d]:
+                    if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                        yield Finding(
+                            path, default.lineno, default.col_offset, self.code,
+                            "mutable default argument is shared across calls and "
+                            "leaks tracers across traces; default to None and "
+                            "construct inside the function")
+                    elif (isinstance(default, ast.Call)
+                          and isinstance(default.func, ast.Name)
+                          and default.func.id in ("list", "dict", "set")):
+                        yield Finding(
+                            path, default.lineno, default.col_offset, self.code,
+                            f"mutable default '{default.func.id}()' is shared "
+                            "across calls; default to None and construct inside "
+                            "the function")
+            elif isinstance(node, ast.Call):
+                name = node.func.attr if isinstance(node.func, ast.Attribute) else (
+                    node.func.id if isinstance(node.func, ast.Name) else None)
+                if name == "scan" and len(node.args) >= 2:
+                    init = node.args[1]
+                    for sub in ast.walk(init):
+                        if isinstance(sub, _NON_PYTREE):
+                            yield Finding(
+                                path, sub.lineno, sub.col_offset, self.code,
+                                "scan carry init contains a set/generator, which "
+                                "is not a pytree; use tuples/dicts/NamedTuples so "
+                                "the carry flattens into traced leaves")
+                            break

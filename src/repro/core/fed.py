@@ -653,8 +653,8 @@ def feature_round(params, data: FeatureFedData, key, batch_size: int,
         if codec_key is None:
             codec_key = jax.random.fold_in(key, 0xC0DEC)
         head_key = jax.random.fold_in(codec_key, 0)
-        block_keys = jax.random.split(jax.random.fold_in(codec_key, 1),
-                                      data.num_clients)
+        block_keys = client_keys(jax.random.fold_in(codec_key, 1),
+                                 jnp.arange(data.num_clients))
     dp_head_key = dp_block_keys = None
     if dp is not None:
         if dp_key is None:

@@ -334,9 +334,10 @@ def dp_sample_round(per_sample_loss, params, data, key, batch_size: int,
     N_i < B entered the clipped mean. Returns (grad_est, per-client
     privatized q sums) to preserve the historical 2-tuple shape."""
     warnings.warn(
-        "repro.core.privacy.dp_sample_round is deprecated; use "
+        "[FLT004] repro.core.privacy.dp_sample_round is deprecated; use "
         "repro.core.fed.sample_round(..., dp=dp) — the dp= path composes "
-        "with codec/EF/topology/cohort and fixes the ragged-client bias",
+        "with codec/EF/topology/cohort and fixes the ragged-client bias "
+        "(flagged by `python -m repro.analysis`)",
         DeprecationWarning, stacklevel=2)
     from repro.core import fed
     grad_est, _, up = fed.sample_round(per_sample_loss, params, data, key,

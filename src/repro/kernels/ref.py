@@ -61,8 +61,8 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     qg = q.reshape(b, kvh, rep, sq, d)
     logits = jnp.einsum("bkrqd,bksd->bkrqs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    qpos = jnp.arange(sq)[:, None]
-    kpos = jnp.arange(sk)[None, :]
+    qpos = jnp.arange(sq, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(sk, dtype=jnp.int32)[None, :]
     mask = jnp.ones((sq, sk), bool)
     if causal:
         mask &= kpos <= qpos + (sk - sq)        # right-aligned when sq < sk

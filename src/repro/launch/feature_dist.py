@@ -28,9 +28,10 @@ from repro.core.topology import ShardedTopology
 
 def _deprecated(name: str, repl: str):
     warnings.warn(
-        f"repro.launch.feature_dist.{name} is deprecated; use {repl} "
+        f"[FLT004] repro.launch.feature_dist.{name} is deprecated; use {repl} "
         "(the shared topology + scan engine, DESIGN.md §12) — the training "
-        "CLI is `python -m repro.launch.train --mode feature`",
+        "CLI is `python -m repro.launch.train --mode feature` "
+        "(flagged by `python -m repro.analysis`)",
         DeprecationWarning, stacklevel=3)
 
 

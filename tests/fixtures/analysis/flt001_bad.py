@@ -1,0 +1,16 @@
+"""FLT001 fixture: host syncs inside a scan-rooted round body."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_body(carry, x):
+    v = carry + x
+    loss = v.sum().item()             # device->host sync in the scan body
+    arr = np.asarray(v)               # host materialization
+    scale = float(jnp.max(v))         # concretizes a tracer
+    return carry + scale, {"loss": loss, "arr": arr.sum()}
+
+
+def run(xs):
+    return jax.lax.scan(round_body, jnp.zeros(()), xs)

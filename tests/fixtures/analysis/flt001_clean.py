@@ -1,0 +1,21 @@
+"""FLT001 clean twin: the same shape of program, all readouts traced or
+host-side (outside any jit entry)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_body(carry, x):
+    v = carry + x
+    loss = jnp.sum(v)                 # stays a traced array
+    scale = jnp.max(v)
+    return carry + scale, {"loss": loss}
+
+
+def run(xs):
+    return jax.lax.scan(round_body, jnp.zeros(()), xs)
+
+
+def report(history):
+    # host code: never passed to a jit entry, so host ops are fine here
+    return float(np.asarray(history["loss"]).mean())

@@ -1,0 +1,20 @@
+"""FLT002 fixture: key reuse, loop reuse, and positional per-client split."""
+import jax
+import jax.numpy as jnp
+
+
+def straight_line_reuse(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))          # same key, repeated randomness
+    return a + b
+
+
+def loop_reuse(key, n):
+    total = jnp.zeros(())
+    for _ in range(n):
+        total += jax.random.uniform(key)      # key never reassigned in loop
+    return total
+
+
+def positional_client_keys(key, num_clients):
+    return jax.random.split(key, num_clients)  # positional, not stable-id

@@ -1,0 +1,28 @@
+"""FLT002 clean twin: fold_in-derived keys, split-and-reassign loops."""
+import jax
+import jax.numpy as jnp
+
+
+def fresh_keys(key):
+    a = jax.random.normal(jax.random.fold_in(key, 0), (4,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+    return a + b
+
+
+def loop_fold_in(key, n):
+    total = jnp.zeros(())
+    for i in range(n):
+        total += jax.random.uniform(jax.random.fold_in(key, i))
+    return total
+
+
+def loop_split(key, n):
+    total = jnp.zeros(())
+    for _ in range(n):
+        key, sub = jax.random.split(key)      # reassigned each iteration
+        total += jax.random.uniform(sub)
+    return total
+
+
+def stable_client_keys(key, ids):
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)

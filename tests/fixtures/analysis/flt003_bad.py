@@ -1,0 +1,13 @@
+"""FLT003 fixture: host entropy/clock calls inside a jitted scope."""
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def noisy_step(x):
+    jitter = random.random()          # frozen into the trace as a constant
+    stamp = time.time()               # likewise
+    return x * jitter + stamp

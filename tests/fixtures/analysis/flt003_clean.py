@@ -1,0 +1,19 @@
+"""FLT003 clean twin: host clock only in host scopes, device randomness
+from jax.random keys."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def noisy_step(x, key):
+    jitter = jax.random.uniform(key)
+    return x * jitter
+
+
+def timed_run(x, key):
+    t0 = time.time()                  # host timing around the dispatch: fine
+    out = noisy_step(x, key)
+    out.block_until_ready()
+    return out, time.time() - t0

@@ -1,0 +1,12 @@
+"""FLT004 fixture: imports/uses of the deprecated shims."""
+from repro.core.privacy import DPConfig, dp_sample_round
+from repro.launch import feature_dist
+
+
+def train(psl, params, data, key, dp):
+    g, q = dp_sample_round(psl, params, data, key, 32, dp)
+    return g, q
+
+
+def make_round(mesh, head_loss, client_h):
+    return feature_dist.make_feature_round(mesh, head_loss, client_h)

@@ -1,0 +1,16 @@
+"""FLT004 clean twin: the replacement APIs."""
+from repro.core import fed
+from repro.core.privacy import DPConfig
+from repro.core.topology import ShardedTopology
+
+
+def train(psl, params, data, key, dp):
+    grad_est, val_est, up = fed.sample_round(psl, params, data, key, 32,
+                                             dp=dp)
+    return grad_est, up["q_grad_sums"]
+
+
+def make_round(mesh, params, data, key, head_loss, client_h):
+    topo = ShardedTopology(mesh, axes=("model",))
+    return fed.feature_round(params, data, key, 32, head_loss, client_h,
+                             topology=topo)

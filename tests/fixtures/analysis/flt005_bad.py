@@ -1,0 +1,12 @@
+"""FLT005 fixture: f64 and dtype-less constructors in kernel-scoped code."""
+# flint: scope=kernel
+import jax.numpy as jnp
+import numpy as np
+
+
+def encode(x):
+    scales = jnp.zeros(x.shape[0])            # dtype-less: weak default
+    table = jnp.arange(256)                   # dtype-less: int32/int64 drift
+    acc = x.astype(jnp.float64)               # f64 doubles bytes-on-wire
+    wide = np.float64(1.0)
+    return scales, table, acc * wide

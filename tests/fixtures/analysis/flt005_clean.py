@@ -1,0 +1,10 @@
+"""FLT005 clean twin: every buffer dtype pinned."""
+# flint: scope=kernel
+import jax.numpy as jnp
+
+
+def encode(x):
+    scales = jnp.zeros((x.shape[0],), jnp.float32)
+    table = jnp.arange(256, dtype=jnp.int32)
+    acc = x.astype(jnp.float32)
+    return scales, table, acc

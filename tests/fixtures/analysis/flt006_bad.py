@@ -1,0 +1,21 @@
+"""FLT006 fixture: mutable defaults and a non-pytree scan carry."""
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(x, history=[]):        # shared across calls, leaks tracers
+    history.append(x)
+    return history
+
+
+def configure(opts={}):               # mutable default dict
+    return opts
+
+
+def run(xs):
+    def body(carry, x):
+        total, seen = carry
+        return (total + x, seen), x
+
+    # a set in the carry is not a pytree: fails at trace time
+    return jax.lax.scan(body, (jnp.zeros(()), {0}), xs)

@@ -1,0 +1,21 @@
+"""FLT006 clean twin: None defaults, tuple/dict pytree carries."""
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(x, history=None):
+    history = [] if history is None else history
+    history.append(x)
+    return history
+
+
+def configure(opts=None):
+    return {} if opts is None else opts
+
+
+def run(xs):
+    def body(carry, x):
+        total, count = carry
+        return (total + x, count + 1), x
+
+    return jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), xs)

@@ -12,7 +12,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import algorithms, fed
 from repro.core.local_updates import algorithm1_local
-from repro.core.privacy import DPConfig, dp_sample_round, noise_multiplier
+from repro.core.privacy import DPConfig, noise_multiplier
 from repro.data.synthetic import classification_dataset
 from repro.models import mlp
 
@@ -81,7 +81,7 @@ def test_dp_round_unbiased_and_noisy():
     n_avg = 60
     for i in range(n_avg):
         k = jax.random.fold_in(key, i)
-        g_dp, _ = dp_sample_round(psl, params0, data, k, 32, dp)
+        g_dp, _, _ = fed.sample_round(psl, params0, data, k, 32, dp=dp)
         g_cl, _, _ = fed.sample_round(psl, params0, data, k, 32)
         acc_dp = g_dp if acc_dp is None else jax.tree.map(jnp.add, acc_dp, g_dp)
         acc_clean = g_cl if acc_clean is None else jax.tree.map(jnp.add, acc_clean, g_cl)
@@ -93,7 +93,7 @@ def test_dp_round_unbiased_and_noisy():
                                    atol=6 * sigma / np.sqrt(n_avg) + 5e-2)
     # a single noised upload differs from the clean one (privacy is "on")
     k0 = jax.random.fold_in(key, 0)
-    g1, _ = dp_sample_round(psl, params0, data, k0, 32, dp)
+    g1, _, _ = fed.sample_round(psl, params0, data, k0, 32, dp=dp)
     g_cl, _, _ = fed.sample_round(psl, params0, data, k0, 32)
     diff = max(float(jnp.max(jnp.abs(a - b)))
                for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g_cl)))
@@ -101,19 +101,21 @@ def test_dp_round_unbiased_and_noisy():
 
 
 def test_feature_dist_shard_map_subprocess():
-    """Vertical FL on a 4-device 'model' mesh: psum h-exchange == the
-    single-process feature_round gradient; training converges."""
+    """Vertical FL on a 4-device 'model' mesh via the modern topology API
+    (the FLT004-deprecated feature_dist shims are no longer exercised):
+    sharded feature_round grads == local reference; algorithm3 converges."""
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.base import FLConfig
-        from repro.core import fed
+        from repro.core import algorithms, fed
+        from repro.core.topology import ShardedTopology
         from repro.data.synthetic import classification_dataset
-        from repro.launch.feature_dist import make_feature_round, train_feature_distributed
         from repro.models import mlp
 
         mesh = jax.make_mesh((4,), ("model",))
+        topo = ShardedTopology(mesh, axes=("model",))
         key = jax.random.PRNGKey(0)
         (z, y, _), _ = classification_dataset(key, n=800, num_features=24,
                                               num_classes=4, test_n=10)
@@ -121,31 +123,26 @@ def test_feature_dist_shard_map_subprocess():
         pi = fdata.feature_blocks.shape[-1]
         w0 = jax.random.normal(key, (4, 12)) * 0.3
         blocks = jax.random.normal(jax.random.fold_in(key, 1), (4, 12, pi)) * 0.3
+        params = {"w0": w0, "blocks": blocks}
 
-        # one round: shard_map grads == reference feature_round grads
-        B = 32
-        idx = jax.random.randint(jax.random.PRNGKey(7), (B,), 0, 800)
-        zb = jnp.take(fdata.feature_blocks, idx, axis=1)
-        yb = jnp.take(fdata.labels, idx, axis=0)
-        with mesh:
-            round_fn = make_feature_round(mesh, mlp.per_sample_loss_from_h, mlp.client_h)
-            gw0, gbl, loss = jax.jit(round_fn)(w0, blocks, zb, yb)
-
-        def full_loss(p):
-            hsum = sum(mlp.client_h(p["blocks"][i], zb[i]) for i in range(4))
-            return jnp.mean(mlp.per_sample_loss_from_h(p["w0"], hsum, yb))
-        ref = jax.grad(full_loss)({"w0": w0, "blocks": blocks})
-        np.testing.assert_allclose(np.asarray(gw0), np.asarray(ref["w0"]),
-                                   rtol=2e-4, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(gbl), np.asarray(ref["blocks"]),
-                                   rtol=2e-4, atol=1e-5)
+        # one round: sharded psum h-exchange == local reference engine
+        rk = jax.random.PRNGKey(7)
+        g_sh, v_sh, _ = fed.feature_round(
+            params, fdata, rk, 32, mlp.per_sample_loss_from_h, mlp.client_h,
+            topology=topo)
+        g_lo, v_lo, _ = fed.feature_round(
+            params, fdata, rk, 32, mlp.per_sample_loss_from_h, mlp.client_h)
+        np.testing.assert_allclose(float(v_sh), float(v_lo), rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(g_sh), jax.tree.leaves(g_lo)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
 
         fl = FLConfig(batch_size=64, a1=0.9, a2=0.5, alpha_rho=0.1,
                       alpha_gamma=0.6, tau=0.2, l2_lambda=1e-5)
-        params, losses = train_feature_distributed(
-            mesh, mlp.per_sample_loss_from_h, mlp.client_h, w0, blocks,
-            fdata.feature_blocks, fdata.labels, fl, rounds=120,
-            key=jax.random.PRNGKey(2))
+        res = algorithms.algorithm3(
+            mlp.per_sample_loss_from_h, mlp.client_h, params, fdata, fl,
+            rounds=120, key=jax.random.PRNGKey(2), topology=topo)
+        losses = np.asarray(res.history["round_loss_est"])
         assert losses[-1] < losses[0], losses
         print("OK", losses[0], "->", losses[-1])
     """)

@@ -275,3 +275,6 @@ def test_feature_dist_deprecation_warns_once():
     assert len(dep) == 1
     assert "--mode feature" in str(dep[0].message)
     assert "make_feature_round" in str(dep[0].message)
+    # the shim message carries the lint rule code so the runtime warning
+    # and `python -m repro.analysis` point at the same rule
+    assert str(dep[0].message).startswith("[FLT004]")

@@ -342,7 +342,8 @@ def test_deprecated_dp_sample_round_warns_and_delegates():
     params = _params0(jax.random.PRNGKey(1))
     dp = privacy.DPConfig(clip_norm=5.0, epsilon=4.0, delta=DELTA)
     rk = jax.random.PRNGKey(7)
-    with pytest.warns(DeprecationWarning, match="dp_sample_round"):
+    with pytest.warns(DeprecationWarning,
+                      match=r"\[FLT004\].*dp_sample_round"):
         g_old, q_old = privacy.dp_sample_round(psl, params, data, rk, B, dp)
     g_new, _, up = fed.sample_round(psl, params, data, rk, B, dp=dp)
     _assert_trees_close(g_old, g_new, rtol=1e-6, atol=1e-7)
